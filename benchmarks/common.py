@@ -1,0 +1,83 @@
+"""Shared benchmark plumbing: problems, drivers, bit accounting."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PaMEConfig, build_topology, run_pame
+from repro.core import baselines as B
+from repro.core.pme import message_bits
+from repro.data.synthetic import make_linear_regression, make_logistic_regression
+
+
+def linreg_problem(m: int, n: int, spn: int = 128, seed: int = 0):
+    """Paper Example 1."""
+    a, b, w_star = make_linear_regression(m, spn, n, seed=seed)
+    a_j, b_j = jnp.asarray(a), jnp.asarray(b)
+
+    def grad_fn(w, batch, key):
+        aa, yy = batch
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    def objective(w):
+        r = jnp.einsum("mbn,n->mb", a_j, w) - b_j
+        return jnp.sum(0.5 * jnp.mean(r**2, axis=1))
+
+    return (a_j, b_j), grad_fn, objective
+
+
+def logreg_problem(m: int, n: int, spn: int = 128, seed: int = 0, lam: float = 1e-3):
+    """Paper Example 2 (with test split for accuracy)."""
+    a, b, w_star = make_logistic_regression(m, spn + 32, n, seed=seed)
+    a_tr, b_tr = jnp.asarray(a[:, :spn]), jnp.asarray(b[:, :spn])
+    a_te, b_te = jnp.asarray(a[:, spn:]), jnp.asarray(b[:, spn:])
+
+    def grad_fn(w, batch, key):
+        aa, yy = batch
+        z = aa @ w
+        loss = jnp.mean(jnp.logaddexp(0.0, z) - yy * z) + 0.5 * lam * jnp.sum(w**2)
+        p = jax.nn.sigmoid(z)
+        g = aa.T @ (p - yy) / aa.shape[0] + lam * w
+        return loss, g
+
+    def objective(w):
+        z = jnp.einsum("mbn,n->mb", a_tr, w)
+        return jnp.sum(
+            jnp.mean(jnp.logaddexp(0.0, z) - b_tr * z, axis=1)
+        ) + 0.5 * lam * m * jnp.sum(w**2)
+
+    def accuracy(w):
+        z = jnp.einsum("mbn,n->mb", a_te, w)
+        return float(jnp.mean(((z > 0).astype(jnp.float32) == b_te)))
+
+    return (a_tr, b_tr), grad_fn, objective, accuracy
+
+
+def pame_bits_per_round(
+    m: int, mean_t: float, s: int, n: int, value_bits: int = 64
+) -> float:
+    """Transmitted bits per *communication* round across the network:
+    every receiver gets t_i sparse messages of (value_bits-1)s + n bits."""
+    return m * mean_t * message_bits(s, n, value_bits)
+
+
+def timed(fn: Callable, *args, repeats: int = 3) -> float:
+    """us per call (post-jit)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

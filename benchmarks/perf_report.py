@@ -1,0 +1,101 @@
+"""§Perf: probe-extrapolated before/after comparison for the hillclimbed
+(arch x shape) pairs.  Reads benchmarks/artifacts/dryrun.json."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import (
+    DRYRUN_PATH,
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    _extrapolate,
+)
+
+EXPERIMENTS = [
+    ("stablelm-1.6b", "train_4k", ["compressed", "remat_dots"]),
+    ("yi-34b", "train_4k",
+     ["compressed", "remat_dots", "embed_vocab_only", "embed_vocab_only+compressed"]),
+    ("deepseek-v2-236b", "prefill_32k", ["chunked2048", "chunked512"]),
+    # E4 (extension): SSM projection sharding
+    ("mamba2-1.3b", "prefill_32k", ["mamba_nosplit_shard", "mamba_split_proj"]),
+    ("mamba2-1.3b", "train_4k", ["mamba_split_proj"]),
+]
+
+
+def _key(arch, shape, depth=None, variant=None):
+    k = f"{arch}|{shape}|single"
+    if depth:
+        k += f"|L{depth}"
+    if variant and variant != "baseline":
+        k += f"|{variant}"
+    return k
+
+
+def extrapolated(res, arch, shape, variant=None):
+    from repro.configs import get_config
+    from repro.launch.dryrun import probe_depths
+
+    full = res.get(_key(arch, shape, variant=variant))
+    if full is None:
+        return None
+    a, b = probe_depths(get_config(arch))
+    pa = res.get(_key(arch, shape, depth=a, variant=variant))
+    pb = res.get(_key(arch, shape, depth=b, variant=variant))
+    rec = _extrapolate(full, pa, pb)
+    return {
+        # raw = as-compiled (lax.scan bodies counted once) — always
+        # comparable across variants; extrapolated = probe-corrected totals
+        "raw_flops": full["flops_per_device"],
+        "raw_bytes": full["bytes_per_device"],
+        "raw_coll": full["collective_bytes_total"],
+        "t_compute": rec["flops_per_device"] / PEAK_FLOPS,
+        "t_memory": rec["bytes_per_device"] / HBM_BW,
+        "t_collective": rec["collective_bytes_total"] / LINK_BW,
+        "temp_gb": full["memory"]["temp_bytes"] / 1e9,
+        "extrapolated": rec.get("extrapolated", False),
+    }
+
+
+def main() -> None:
+    with open(DRYRUN_PATH) as f:
+        res = json.load(f)
+    report = {}
+    for arch, shape, variants in EXPERIMENTS:
+        base = extrapolated(res, arch, shape)
+        rows = {"baseline": base}
+        print(f"\n=== {arch} x {shape} (single-pod) ===")
+        hdr = (
+            f"{'variant':28s} | {'raw flops':>10s} {'raw bytes':>10s} {'raw coll':>10s}"
+            f" {'temp GB':>8s} | {'ext cmp(s)':>10s} {'ext mem(s)':>10s} {'ext col(s)':>10s}"
+        )
+        print(hdr)
+
+        def prow(name, r):
+            if r is None:
+                print(f"{name:28s} (missing)")
+                return
+            ext = (
+                f"{r['t_compute']:10.4g} {r['t_memory']:10.4g} {r['t_collective']:10.4g}"
+                if r["extrapolated"] else f"{'—':>10s} {'—':>10s} {'—':>10s}"
+            )
+            print(
+                f"{name:28s} | {r['raw_flops']:10.3e} {r['raw_bytes']:10.3e}"
+                f" {r['raw_coll']:10.3e} {r['temp_gb']:8.1f} | {ext}"
+            )
+
+        prow("baseline", base)
+        for v in variants:
+            r = extrapolated(res, arch, shape, v)
+            rows[v] = r
+            prow(v, r)
+        report[f"{arch}|{shape}"] = rows
+    out = os.path.join(os.path.dirname(DRYRUN_PATH), "perf_report.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Output: `name,us_per_call,derived` CSV rows (us_per_call = jitted step
+wall time on this CPU host; derived = the figure's headline metric).
+Full curves land in benchmarks/artifacts/bench_results.json for
+EXPERIMENTS.md.
+
+Figure map:
+  bench_transmission_rate  Fig 2a & 3   (s/n sweep, Example 1)
+  bench_participation      Fig 2b & 4   (nu sweep, Example 1)
+  bench_comm_period        Fig 2c/d,5,6 (kappa homo/hetero, Example 1)
+  bench_connectivity       Fig 7        (degree x s/n heatmap)
+  bench_vs_baselines       Figs 8-10    (Example 2 vs D-PSGD/DFedSAM/BEER/ANQ-NIDS)
+  bench_heterogeneity      Figs 11-12   (label-skew CNN / Dirichlet ResNet-20)
+  bench_comm_volume        Eq. (8)      (bit accounting)
+  bench_kernels            —            (Pallas kernels, interpret-mode checks)
+  bench_roofline           —            (§Roofline table from the dry-run)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PaMEConfig, build_topology, run_pame
+from repro.core import baselines as B
+from repro.core.compression import qsgd, rand_k
+from repro.core.pme import message_bits
+
+from benchmarks.common import (
+    csv_row,
+    linreg_problem,
+    logreg_problem,
+    pame_bits_per_round,
+    timed,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ART = os.path.join(HERE, "artifacts")
+os.makedirs(ART, exist_ok=True)
+
+RESULTS: Dict[str, object] = {}
+
+
+def _pame_run(m, n, cfg, steps, seed=0, problem="linreg", topo_kind="erdos_renyi",
+              topo_kwargs=None, spn=128):
+    topo = build_topology(topo_kind, m, **(topo_kwargs or dict(p=0.4, seed=seed)))
+    if problem == "linreg":
+        batch, grad_fn, objective = linreg_problem(m, n, spn=spn, seed=seed)
+        acc = None
+    else:
+        batch, grad_fn, objective, acc = logreg_problem(m, n, spn=spn, seed=seed)
+    t0 = time.perf_counter()
+    state, hist = run_pame(
+        jax.random.PRNGKey(seed), jnp.zeros(n), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=steps, objective_fn=objective, tol_std=1e-3,
+    )
+    wall = time.perf_counter() - t0
+    mean_w = jax.tree_util.tree_map(lambda x: x.mean(axis=0), state.params)
+    out = {
+        "objective": hist["objective"],
+        "steps_run": hist["steps_run"],
+        "final": hist["objective"][-1],
+        "us_per_call": wall / max(hist["steps_run"], 1) * 1e6,
+        "mean_t": float(np.mean(np.maximum(1, np.floor(cfg.nu * topo.degrees)))),
+    }
+    if acc is not None:
+        out["accuracy"] = acc(mean_w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def bench_transmission_rate(quick=False):
+    """Fig 2a/3: final objective & convergence vs s/n for m in {16,32,64}."""
+    n = 300
+    rates = [0.1, 0.2, 0.4, 0.6, 1.0]
+    ms = [16, 32] if quick else [16, 32, 64]
+    table = {}
+    for m in ms:
+        for p in rates:
+            cfg = PaMEConfig(nu=0.2, p=p, gamma=1.01, sigma0=8.0)
+            r = _pame_run(m, n, cfg, steps=300, problem="linreg")
+            table[f"m{m}_p{p}"] = r
+            csv_row(
+                f"transmission_rate/m={m}/s_over_n={p}", r["us_per_call"],
+                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+            )
+    # paper claim C4: gains are marginal once s/n exceeds ~0.2
+    for m in ms:
+        p01 = table[f"m{m}_p0.1"]["final"]
+        p02 = table[f"m{m}_p0.2"]["final"]
+        hi = table[f"m{m}_p1.0"]["final"]
+        csv_row(
+            f"transmission_rate/claimC4/m={m}", 0.0,
+            f"final_p0.1={p01:.4f};final_p0.2={p02:.4f};final_p1.0={hi:.4f};"
+            f"ratio_p0.2={p02/max(hi,1e-9):.3f}",
+        )
+    RESULTS["transmission_rate"] = table
+
+
+def bench_participation(quick=False):
+    """Fig 2b/4: nu sweep."""
+    n = 300
+    nus = [0.1, 0.2, 0.4, 0.6]
+    ms = [16, 32] if quick else [16, 32, 64]
+    table = {}
+    for m in ms:
+        for nu in nus:
+            cfg = PaMEConfig(nu=nu, p=0.2, gamma=1.01, sigma0=8.0)
+            r = _pame_run(m, n, cfg, steps=300, problem="linreg")
+            table[f"m{m}_nu{nu}"] = r
+            csv_row(
+                f"participation/m={m}/nu={nu}", r["us_per_call"],
+                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+            )
+    RESULTS["participation"] = table
+
+
+def bench_comm_period(quick=False):
+    """Fig 2c/d + 5/6: homogeneous vs heterogeneous kappa."""
+    n, m = 300, 32
+    table = {}
+    for k0 in [1, 2, 4, 8, 16]:
+        cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, homogeneous_kappa=k0)
+        r = _pame_run(m, n, cfg, steps=400)
+        table[f"homo_k{k0}"] = r
+        csv_row(
+            f"comm_period/homogeneous/k0={k0}", r["us_per_call"],
+            f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+        )
+    for lo, hi in [(1, 3), (3, 7), (5, 10), (8, 16)]:
+        cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, kappa_lo=lo, kappa_hi=hi)
+        r = _pame_run(m, n, cfg, steps=400)
+        table[f"hetero_k{lo}_{hi}"] = r
+        csv_row(
+            f"comm_period/heterogeneous/k=[{lo},{hi}]", r["us_per_call"],
+            f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+        )
+    RESULTS["comm_period"] = table
+
+
+def bench_connectivity(quick=False):
+    """Fig 7 heatmap: degree x transmission rate -> (final obj, iters)."""
+    n, m = 300, 32
+    degrees = [2, 6, 14] if quick else [2, 4, 8, 14, 20]
+    rates = [0.1, 0.3, 0.6]
+    table = {}
+    for d in degrees:
+        for p in rates:
+            cfg = PaMEConfig(nu=0.4, p=p, gamma=1.01, sigma0=8.0)
+            r = _pame_run(
+                m, n, cfg, steps=300, topo_kind="regular",
+                topo_kwargs=dict(degree=d, seed=0),
+            )
+            table[f"deg{d}_p{p}"] = r
+            csv_row(
+                f"connectivity/degree={d}/s_over_n={p}", r["us_per_call"],
+                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+            )
+    RESULTS["connectivity"] = table
+
+
+def bench_vs_baselines(quick=False):
+    """Figs 8-10: Example 2 (logistic regression) — objective/accuracy vs
+    rounds and total transmitted volume, PaME vs the four baselines."""
+    m, n = 32, 1000
+    steps = 150 if quick else 300
+    topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
+    bmat = jnp.asarray(topo.mixing)
+    batch, grad_fn, objective, accuracy = logreg_problem(m, n, spn=128, seed=0)
+    w0 = B.stack_params(jnp.zeros(n), m)
+    key = jax.random.PRNGKey(0)
+    mean_deg = float(topo.degrees.mean())
+    table = {}
+
+    # --- PaME ---
+    cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.002, sigma0=1.0, kappa_lo=3, kappa_hi=7)
+    r = _pame_run(m, n, cfg, steps=steps, problem="logreg")
+    s = int(round(0.2 * n))
+    comm_rounds = r["steps_run"] / 5.0  # mean kappa = 5
+    bits = comm_rounds * pame_bits_per_round(m, r["mean_t"], s, n)
+    table["pame"] = {**r, "bits": bits, "comm_rounds": comm_rounds}
+    csv_row(
+        "vs_baselines/pame", r["us_per_call"],
+        f"acc={r['accuracy']:.4f};final_obj={r['final']:.4f}"
+        f";comm_rounds={comm_rounds:.0f};gbits={bits/1e9:.3f}",
+    )
+
+    def run_baseline(init_state, step_closure, bits_per_round, params_of=lambda s_: s_.params):
+        t0 = time.perf_counter()
+        st_, hist = B.run_algorithm(
+            step_closure, init_state, lambda k: batch, steps,
+            objective_fn=objective, tol_std=1e-3, params_of=params_of,
+        )
+        wall = time.perf_counter() - t0
+        n_run = hist["steps_run"]
+        mean_w = jax.tree_util.tree_map(lambda x: x.mean(axis=0), params_of(st_))
+        return {
+            "steps_run": n_run,
+            "final": hist["objective"][-1],
+            "accuracy": accuracy(mean_w),
+            "us_per_call": wall / max(n_run, 1) * 1e6,
+            "bits": n_run * bits_per_round,
+        }
+
+    full_bits = m * mean_deg * message_bits(n, n)  # dense vectors to all nbrs
+    table["dpsgd"] = run_baseline(
+        B.dpsgd_init(key, w0),
+        lambda s_, b_: B.dpsgd_step(s_, b_, grad_fn, bmat, 0.1), full_bits)
+    table["dfedsam"] = run_baseline(
+        B.dfedsam_init(key, w0),
+        lambda s_, b_: B.dfedsam_step(s_, b_, grad_fn, bmat, 0.1, rho=0.01), full_bits)
+    comp = rand_k(0.2, rescale=False)
+    table["beer"] = run_baseline(
+        B.beer_init(key, w0, batch, grad_fn),
+        lambda s_, b_: B.beer_step(s_, b_, grad_fn, bmat, 0.05, comp, 0.4),
+        m * mean_deg * 2 * comp.bits(n))
+    q = qsgd(16)
+    table["anq_nids"] = run_baseline(
+        B.nids_init(key, w0, batch, grad_fn, 0.1),
+        lambda s_, b_: B.nids_step(s_, b_, grad_fn, bmat, 0.1, q),
+        m * mean_deg * q.bits(n))
+
+    for name in ("dpsgd", "dfedsam", "beer", "anq_nids"):
+        rr = table[name]
+        csv_row(
+            f"vs_baselines/{name}", rr["us_per_call"],
+            f"acc={rr['accuracy']:.4f};final_obj={rr['final']:.4f}"
+            f";rounds={rr['steps_run']};gbits={rr['bits']/1e9:.3f}",
+        )
+    red = 1.0 - table["pame"]["bits"] / table["dpsgd"]["bits"]
+    csv_row("vs_baselines/claimC7_volume_reduction_vs_dpsgd", 0.0, f"reduction={red:.2%}")
+    RESULTS["vs_baselines"] = table
+
+
+def bench_heterogeneity(quick=False):
+    """Fig 11 (label skew, CNN) + Fig 12 (Dirichlet, ResNet-20), synthetic
+    stand-in images (offline container; heterogeneity mechanism exact)."""
+    from repro.data import (
+        NodeBatcher,
+        SyntheticClassification,
+        dirichlet_partition,
+        iid_partition,
+        label_skew_partition,
+    )
+    from repro.models.cnn import ce_loss, cnn_apply, cnn_init, resnet20_apply, resnet20_init
+
+    table = {}
+    m = 4
+    steps = 40 if quick else 100
+
+    def run_fl(ds, parts, init_fn, apply_fn, steps, sigma0=10.0):
+        nb = NodeBatcher({"x": ds.images, "y": ds.labels}, parts, batch_size=32, seed=0)
+        topo = build_topology("complete", m)
+        cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=sigma0, kappa_lo=2, kappa_hi=4)
+
+        def grad_fn(params, batch, key):
+            return jax.value_and_grad(
+                lambda p: ce_loss(apply_fn(p, batch["x"]), batch["y"])
+            )(params)
+
+        def batch_fn(k):
+            b = nb.next()
+            return {"x": jnp.asarray(b["x"], jnp.float32), "y": jnp.asarray(b["y"], jnp.int32)}
+
+        t0 = time.perf_counter()
+        state, hist = run_pame(
+            jax.random.PRNGKey(0), init_fn(jax.random.PRNGKey(1)), m,
+            grad_fn, batch_fn, topo, cfg, num_steps=steps, tol_std=0.0,
+        )
+        wall = time.perf_counter() - t0
+        mean_params = jax.tree_util.tree_map(lambda x: x.mean(axis=0), state.params)
+        logits = apply_fn(mean_params, jnp.asarray(ds.images[:512], jnp.float32))
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.labels[:512])))
+        return {
+            "loss": hist["loss"],
+            "final_loss": hist["loss"][-1],
+            "accuracy": acc,
+            "us_per_call": wall / steps * 1e6,
+        }
+
+    # Fig 11: label skew C in {1, 7, 10} on the CNN
+    ds = SyntheticClassification.make(1024, (28, 28, 1), 10, seed=0, sep=3.0)
+    for c in (1, 7, 10):
+        parts = label_skew_partition(ds.labels, m, c, seed=0)
+        r = run_fl(ds, parts, lambda k: cnn_init(k), cnn_apply, steps)
+        table[f"cnn_labelskew_C{c}"] = r
+        csv_row(
+            f"heterogeneity/cnn/C={c}", r["us_per_call"],
+            f"acc={r['accuracy']:.3f};final_loss={r['final_loss']:.3f}",
+        )
+
+    # Fig 12: Dirichlet beta in {0.3, 0.6} + iid on ResNet-20 (short run)
+    ds2 = SyntheticClassification.make(512, (32, 32, 3), 10, seed=1, sep=2.0)
+    rn_steps = 10 if quick else 40
+    for beta in (0.3, 0.6, None):
+        if beta is None:
+            parts = iid_partition(ds2.labels, m, seed=0)
+            tag = "iid"
+        else:
+            parts = dirichlet_partition(ds2.labels, m, beta, seed=0)
+            tag = f"beta{beta}"
+        r = run_fl(
+            ds2, parts, lambda k: resnet20_init(k), resnet20_apply, rn_steps, sigma0=10.0
+        )
+        table[f"resnet20_{tag}"] = r
+        csv_row(
+            f"heterogeneity/resnet20/{tag}", r["us_per_call"],
+            f"acc={r['accuracy']:.3f};final_loss={r['final_loss']:.3f}",
+        )
+    RESULTS["heterogeneity"] = table
+
+
+def bench_comm_volume(quick=False):
+    """Eq. (8): bits per message, sparse vs dense, 64- and 16-bit payloads."""
+    table = {}
+    for n in (10_000, 100_000, 1_000_000):
+        for frac in (0.01, 0.1, 0.2):
+            s = int(frac * n)
+            for vb in (64, 16):
+                sparse = message_bits(s, n, vb)
+                dense = vb * n
+                table[f"n{n}_s{s}_b{vb}"] = {"sparse": sparse, "dense": dense}
+                csv_row(
+                    f"comm_volume/n={n}/s={s}/bits={vb}", 0.0,
+                    f"sparse_bits={sparse};dense_bits={dense};saving={1-sparse/dense:.2%}",
+                )
+    RESULTS["comm_volume"] = table
+
+
+def bench_kernels(quick=False):
+    """Pallas kernels in interpret mode (correctness-path timing only —
+    real-TPU wall times are not measurable on this CPU host)."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.pme_average.ops import pme_average
+    from repro.kernels.pme_average.ref import pme_average_ref
+    from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+    from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
+
+    rng = np.random.default_rng(0)
+    table = {}
+
+    m, n = 16, 4096
+    w = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    masks = jnp.asarray(rng.random((m, n)) < 0.2)
+    a = jnp.asarray(((rng.random((m, m)) < 0.4) & ~np.eye(m, dtype=bool)), jnp.float32)
+    us_k = timed(lambda: pme_average(w, masks, a))
+    us_r = timed(jax.jit(lambda: pme_average_ref(w, masks.astype(w.dtype), a)))
+    err = float(jnp.max(jnp.abs(pme_average(w, masks, a) - pme_average_ref(w, masks.astype(w.dtype), a))))
+    table["pme_average"] = {"us_kernel": us_k, "us_ref": us_r, "max_err": err}
+    csv_row("kernels/pme_average", us_k, f"ref_us={us_r:.1f};max_err={err:.2e}")
+
+    b, s, h, kv, d = 1, 256, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    us_k = timed(lambda: flash_attention(q, k, v, block_q=64, block_k=64), repeats=1)
+    us_r = timed(jax.jit(lambda: attention_ref(q, k, v)))
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v, block_q=64, block_k=64) - attention_ref(q, k, v))))
+    table["flash_attention"] = {"us_kernel": us_k, "us_ref": us_r, "max_err": err}
+    csv_row("kernels/flash_attention", us_k, f"ref_us={us_r:.1f};max_err={err:.2e}")
+
+    B_, Nc, L, H, P, G, N = 1, 4, 32, 4, 16, 2, 16
+    xc = jnp.asarray(rng.standard_normal((B_, Nc, L, H, P)), jnp.float32)
+    dtc = jnp.asarray(rng.random((B_, Nc, L, H)) * 0.2 + 0.01, jnp.float32)
+    av = jnp.asarray(-np.exp(rng.standard_normal(H) * 0.2), jnp.float32)
+    cum = jnp.cumsum(dtc * av[None, None, None], axis=2)
+    bc = jnp.asarray(rng.standard_normal((B_, Nc, L, G, N)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((B_, Nc, L, G, N)), jnp.float32)
+    us_k = timed(lambda: ssd_intra_chunk(xc, dtc, cum, bc, cc, H // G), repeats=1)
+    us_r = timed(jax.jit(lambda: ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, H // G)))
+    yk, _ = ssd_intra_chunk(xc, dtc, cum, bc, cc, H // G)
+    yr, _ = ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, H // G)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    table["ssd_scan"] = {"us_kernel": us_k, "us_ref": us_r, "max_err": err}
+    csv_row("kernels/ssd_scan", us_k, f"ref_us={us_r:.1f};max_err={err:.2e}")
+    RESULTS["kernels"] = table
+
+
+def bench_roofline(quick=False):
+    """§Roofline table (single-pod baselines for all 40 pairs)."""
+    from benchmarks import roofline
+
+    try:
+        rows = roofline.build_table()
+    except FileNotFoundError:
+        csv_row("roofline", 0.0, "SKIPPED=no dryrun.json; run repro.launch.dryrun first")
+        return
+    print(roofline.format_table(rows))
+    for r in rows:
+        csv_row(
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"compute_s={r['t_compute_s']:.4g};memory_s={r['t_memory_s']:.4g};"
+            f"collective_s={r['t_collective_s']:.4g};dominant={r['dominant']};"
+            f"useful={r['useful_ratio']:.2f}",
+        )
+    RESULTS["roofline"] = rows
+
+
+BENCHES = {
+    "transmission_rate": bench_transmission_rate,
+    "participation": bench_participation,
+    "comm_period": bench_comm_period,
+    "connectivity": bench_connectivity,
+    "vs_baselines": bench_vs_baselines,
+    "heterogeneity": bench_heterogeneity,
+    "comm_volume": bench_comm_volume,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        t0 = time.perf_counter()
+        BENCHES[name](quick=args.quick)
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s", flush=True)
+    with open(os.path.join(ART, "bench_results.json"), "w") as f:
+        json.dump(RESULTS, f, indent=1, default=float)
+    print(f"# wrote {os.path.join(ART, 'bench_results.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Example 3: DFL image classification under label-skew
+heterogeneity (C classes per node), PaME vs D-PSGD.
+
+    PYTHONPATH=src python examples/cnn_heterogeneity.py --classes 7
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PaMEConfig, build_topology, run_pame
+from repro.core import baselines as B
+from repro.data import NodeBatcher, SyntheticClassification, label_skew_partition
+from repro.models.cnn import ce_loss, cnn_apply, cnn_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--classes", type=int, default=7, help="C classes per node")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    m = args.nodes
+    ds = SyntheticClassification.make(1024, (28, 28, 1), 10, seed=0, sep=3.0)
+    parts = label_skew_partition(ds.labels, m, args.classes, seed=0)
+    print(
+        f"[hetero] m={m} nodes, C={args.classes} classes/node "
+        f"(shard sizes: {[len(p) for p in parts]})"
+    )
+    nb = NodeBatcher({"x": ds.images, "y": ds.labels}, parts, batch_size=32, seed=0)
+    topo = build_topology("complete", m)
+
+    def grad_fn(params, batch, key):
+        return jax.value_and_grad(
+            lambda p: ce_loss(cnn_apply(p, batch["x"]), batch["y"])
+        )(params)
+
+    def batch_fn(k):
+        b = nb.next()
+        return {
+            "x": jnp.asarray(b["x"], jnp.float32),
+            "y": jnp.asarray(b["y"], jnp.int32),
+        }
+
+    def acc_of(params_mean):
+        logits = cnn_apply(params_mean, jnp.asarray(ds.images[:512], jnp.float32))
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.labels[:512])))
+
+    # --- PaME ---
+    cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=10.0, kappa_lo=2, kappa_hi=4)
+    state, hist = run_pame(
+        jax.random.PRNGKey(0), cnn_init(jax.random.PRNGKey(1)), m,
+        grad_fn, batch_fn, topo, cfg, num_steps=args.steps, tol_std=0.0,
+    )
+    mp = jax.tree_util.tree_map(lambda x: x.mean(0), state.params)
+    print(
+        f"[hetero] PaME   : loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f},"
+        f" acc(mean model) = {acc_of(mp):.3f}"
+        f"  [transmits {cfg.p:.0%} of coords, every ~3 rounds]"
+    )
+
+    # --- D-PSGD (dense gossip every round) ---
+    bmat = jnp.asarray(topo.mixing)
+    st = B.dpsgd_init(jax.random.PRNGKey(0), B.stack_params(cnn_init(jax.random.PRNGKey(1)), m))
+    losses = []
+    step = jax.jit(lambda s, b: B.dpsgd_step(s, b, grad_fn, bmat, 0.05))
+    for k in range(args.steps):
+        st, metrics = step(st, batch_fn(k))
+        losses.append(float(metrics["loss_mean"]))
+    mp2 = jax.tree_util.tree_map(lambda x: x.mean(0), st.params)
+    print(
+        f"[hetero] D-PSGD : loss {losses[0]:.3f} -> {losses[-1]:.3f},"
+        f" acc(mean model) = {acc_of(mp2):.3f}"
+        f"  [transmits 100% of coords, every round]"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: PaME on the paper's Example 1 (decentralized linear
+regression) in ~40 lines of user code.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the public API: build a topology, define a per-node loss,
+run Algorithm 1, and inspect the Theorem-1 estimators.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PaMEConfig, build_topology, run_pame, pme
+from repro.data.synthetic import make_linear_regression
+
+M, N = 16, 200
+
+# --- data: b = <a, w*> + 0.5 e, per-node shards (Example 1) ---------------
+a, b, w_star = make_linear_regression(M, samples_per_node=64, n=N, seed=0)
+a_j, b_j = jnp.asarray(a), jnp.asarray(b)
+
+
+def grad_fn(w, batch, key):
+    aa, yy = batch
+    r = aa @ w - yy
+    return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+
+def objective(w):
+    r = jnp.einsum("mbn,n->mb", a_j, w) - b_j
+    return jnp.sum(0.5 * jnp.mean(r**2, axis=1))
+
+
+# --- run PaME over a random communication graph ---------------------------
+topo = build_topology("erdos_renyi", M, p=0.4, seed=1)
+print(f"graph: m={M}, max degree={topo.max_degree}, zeta={topo.zeta:.3f}")
+
+cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, kappa_lo=3, kappa_hi=7)
+state, hist = run_pame(
+    jax.random.PRNGKey(0), jnp.zeros(N), M, grad_fn, lambda k: (a_j, b_j),
+    topo, cfg, num_steps=400, objective_fn=objective,
+)
+print(
+    f"PaME: f went {hist['objective'][0]:.3f} -> {hist['objective'][-1]:.3f}"
+    f" in {hist['steps_run']} iterations"
+    f" (noise floor = {M * 0.5 * 0.25:.2f})"
+)
+w_mean = np.asarray(jax.tree_util.tree_map(lambda x: x.mean(0), state.params))
+print(f"recovery error ||w_bar - w*|| = {np.linalg.norm(w_mean - w_star):.3f}")
+
+# --- Theorem 1 in action ---------------------------------------------------
+print("\nTheorem 1 demo (count-weighted vs naive averaging):")
+w = jnp.asarray(np.random.default_rng(0).standard_normal((5, 8)), jnp.float32)
+target = np.asarray(w[1:]).mean(axis=0)
+sel = jnp.zeros((5, 5)).at[1:, 0].set(1.0)  # node 0 receives from 1..4
+acc_bar = np.zeros(8)
+acc_naive = np.zeros(8)
+T = 2000
+for t in range(T):
+    masks = pme.sample_coordinate_masks(jax.random.PRNGKey(t), 5, 8, s=3)
+    masks = masks.at[0].set(False)
+    acc_bar += np.asarray(pme.pme_average(w, masks, sel)[0])
+    acc_naive += np.asarray(pme.naive_average(w, masks, sel)[0])
+print("  target mean     :", np.round(target, 3))
+print("  count-weighted  :", np.round(acc_bar / T, 3), "(unbiased)")
+print("  naive /t        :", np.round(acc_naive / T, 3), f"(biased ~ s/n = {3/8:.2f}x)")

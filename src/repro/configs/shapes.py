@@ -1,0 +1,102 @@
+"""The four assigned input shapes and the (arch x shape) policy.
+
+  train_4k     seq=4096    global_batch=256   -> train_step (one PaME iter)
+  prefill_32k  seq=32768   global_batch=32    -> prefill
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 new token,
+                                                 KV/state cache of seq_len)
+  long_500k    seq=524288  global_batch=1     -> serve_step
+
+long_500k policy: SSM/hybrid run natively (O(1) state).  Every
+attention-bearing arch gets a sliding-window variant (window=4096,
+ring-buffer cache) selected automatically at this shape — full quadratic
+attention at 512k is infeasible on the target mesh, and the windowed
+substitution is what makes the shape runnable for dense/MoE/VLM/audio
+archs (noted in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+__all__ = ["InputShape", "INPUT_SHAPES", "config_for_shape", "input_specs", "cache_capacity"]
+
+LONG_CTX_WINDOW = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the per-shape policy (sliding window at 512k for attn archs)."""
+    if shape.name == "long_500k" and cfg.arch_type != "ssm" and cfg.window is None:
+        return cfg.replace(window=LONG_CTX_WINDOW)
+    return cfg
+
+
+def cache_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer capacity for decode caches."""
+    if cfg.window is not None:
+        return min(shape.seq_len, cfg.window)
+    return shape.seq_len
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, m_nodes: int = 1
+) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens [m, B/m, S]   (+ per-node patch embeds for vlm)
+    prefill: tokens [B, S]        (+ patch embeds)
+    decode:  token [B], pos [], cache pytree (abstract via eval_shape)
+    """
+    cfg = config_for_shape(cfg, shape)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if shape.global_batch % m_nodes:
+            raise ValueError(f"global_batch {shape.global_batch} % m={m_nodes}")
+        b = shape.global_batch // m_nodes
+        text = shape.seq_len - (cfg.n_patches if cfg.arch_type == "vlm" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((m_nodes, b, text), i32)}
+        if cfg.arch_type == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (m_nodes, b, cfg.n_patches, cfg.vision_dim), jnp.dtype(cfg.dtype)
+            )
+        return specs
+    if shape.kind == "prefill":
+        b = shape.global_batch
+        text = shape.seq_len - (cfg.n_patches if cfg.arch_type == "vlm" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, text), i32)}
+        if cfg.arch_type == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.vision_dim), jnp.dtype(cfg.dtype)
+            )
+        return specs
+    if shape.kind == "decode":
+        b = shape.global_batch
+        cap = cache_capacity(cfg, shape)
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, cap))
+        return {
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)

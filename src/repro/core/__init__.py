@@ -1,0 +1,26 @@
+"""Core of the reproduction: the PaME algorithm and its substrate.
+
+  topology     — communication graphs, doubly-stochastic mixing matrices
+  pme          — Partial Message Exchange (Algorithm 2)
+  pame         — the PaME step (Algorithm 1)
+  baselines    — D-PSGD / DFedSAM / CHOCO-SGD / BEER / (AN)Q-NIDS
+  compression  — rand-k / top-k / QSGD / one-bit operators
+  gossip       — mesh-sharded gossip (dense-masked + compressed payload)
+"""
+from repro.core.topology import Topology, build_topology  # noqa: F401
+from repro.core.pme import (  # noqa: F401
+    pme_average,
+    pme_average_pytree,
+    naive_average,
+    sample_coordinate_masks,
+    sample_neighbor_selection,
+    message_bits,
+)
+from repro.core.pame import (  # noqa: F401
+    PaMEConfig,
+    PaMEState,
+    pame_init,
+    pame_step,
+    run_pame,
+    make_topology_arrays,
+)

@@ -1,0 +1,356 @@
+"""Baseline DFL algorithms the paper compares against (Sec. V-D):
+
+  * D-PSGD      (Lian et al., 2017)       — gossip + local SGD
+  * DFedSAM     (Shi et al., 2023)        — SAM local step + gossip
+  * CHOCO-SGD   (Koloskova et al., 2020)  — compressed gossip, error feedback
+  * BEER        (Zhao et al., 2022)       — compressed gradient tracking
+  * (AN)Q-NIDS  (Michelusi et al., 2022)  — NIDS with quantized messages
+
+All operate on node-stacked pytrees [m, ...] and a doubly-stochastic mixing
+matrix B (Assumption 1), mirroring `repro.core.pame` so the benchmark
+harness can swap algorithms behind one interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor, identity
+
+GradFn = Callable[[object, object, jax.Array], Tuple[jax.Array, object]]
+
+__all__ = [
+    "DPSGDState", "dpsgd_init", "dpsgd_step",
+    "DFedSAMState", "dfedsam_init", "dfedsam_step",
+    "ChocoState", "choco_init", "choco_step",
+    "BeerState", "beer_init", "beer_step",
+    "NidsState", "nids_init", "nids_step",
+    "stack_params", "run_algorithm",
+]
+
+
+def stack_params(params0: object, m: int) -> object:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
+    )
+
+
+def _mix(b: jax.Array, tree: object) -> object:
+    """Gossip: out_i = sum_j B_ji x_j for every leaf."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.einsum("ji,j...->i...", b.astype(x.dtype), x), tree
+    )
+
+
+def _axpy(a: float, x: object, y: object) -> object:
+    return jax.tree_util.tree_map(lambda u, v: a * u + v, x, y)
+
+
+def _sub(x: object, y: object) -> object:
+    return jax.tree_util.tree_map(lambda u, v: u - v, x, y)
+
+
+def _add(x: object, y: object) -> object:
+    return jax.tree_util.tree_map(lambda u, v: u + v, x, y)
+
+
+def _compress_tree(comp: Compressor, key: jax.Array, tree: object) -> object:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for idx, leaf in enumerate(leaves):
+        m = leaf.shape[0]
+        flat = leaf.reshape(m, -1)
+        out.append(
+            comp.apply(jax.random.fold_in(key, idx), flat).reshape(leaf.shape)
+        )
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _node_grads(grad_fn: GradFn, params: object, batch: object, key: jax.Array):
+    leaves = jax.tree_util.tree_leaves(params)
+    m = leaves[0].shape[0]
+    keys = jax.random.split(key, m)
+    return jax.vmap(grad_fn)(params, batch, keys)
+
+
+# --------------------------------------------------------------------------
+# D-PSGD
+# --------------------------------------------------------------------------
+class DPSGDState(NamedTuple):
+    params: object
+    step: jax.Array
+    key: jax.Array
+
+
+def dpsgd_init(key: jax.Array, params_stacked: object) -> DPSGDState:
+    return DPSGDState(params_stacked, jnp.zeros((), jnp.int32), key)
+
+
+def dpsgd_step(
+    state: DPSGDState, batch: object, grad_fn: GradFn, b: jax.Array, lr: float
+) -> Tuple[DPSGDState, dict]:
+    key = jax.random.fold_in(state.key, state.step)
+    losses, grads = _node_grads(grad_fn, state.params, batch, key)
+    mixed = _mix(b, state.params)
+    new_params = _axpy(-lr, grads, mixed)
+    return (
+        DPSGDState(new_params, state.step + 1, state.key),
+        {"loss_mean": jnp.mean(losses)},
+    )
+
+
+# --------------------------------------------------------------------------
+# DFedSAM — sharpness-aware local step, then gossip
+# --------------------------------------------------------------------------
+class DFedSAMState(NamedTuple):
+    params: object
+    step: jax.Array
+    key: jax.Array
+
+
+def dfedsam_init(key: jax.Array, params_stacked: object) -> DFedSAMState:
+    return DFedSAMState(params_stacked, jnp.zeros((), jnp.int32), key)
+
+
+def dfedsam_step(
+    state: DFedSAMState,
+    batch: object,
+    grad_fn: GradFn,
+    b: jax.Array,
+    lr: float,
+    rho: float = 0.05,
+    local_steps: int = 1,
+) -> Tuple[DFedSAMState, dict]:
+    key = jax.random.fold_in(state.key, state.step)
+    params = state.params
+    loss0 = None
+    for t in range(local_steps):
+        k_t = jax.random.fold_in(key, t)
+        losses, g1 = _node_grads(grad_fn, params, batch, k_t)
+        if loss0 is None:
+            loss0 = jnp.mean(losses)
+        # per-node gradient norm for the SAM ascent step
+        sq = jax.tree_util.tree_map(
+            lambda g: jnp.sum(g.reshape(g.shape[0], -1) ** 2, axis=1), g1
+        )
+        norm = jnp.sqrt(sum(jax.tree_util.tree_leaves(sq)) + 1e-12)
+
+        def _ascend(p, g):
+            s = (rho / norm).reshape((-1,) + (1,) * (p.ndim - 1))
+            return p + g * s
+
+        adv = jax.tree_util.tree_map(_ascend, params, g1)
+        _, g2 = _node_grads(grad_fn, adv, batch, jax.random.fold_in(k_t, 1))
+        params = _axpy(-lr, g2, params)
+    new_params = _mix(b, params)
+    return (
+        DFedSAMState(new_params, state.step + 1, state.key),
+        {"loss_mean": loss0},
+    )
+
+
+# --------------------------------------------------------------------------
+# CHOCO-SGD — compressed gossip with error feedback
+# --------------------------------------------------------------------------
+class ChocoState(NamedTuple):
+    params: object   # x_i
+    hats: object     # \hat x_i (public surrogates, consistent across nodes)
+    step: jax.Array
+    key: jax.Array
+
+
+def choco_init(key: jax.Array, params_stacked: object) -> ChocoState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    return ChocoState(params_stacked, zeros, jnp.zeros((), jnp.int32), key)
+
+
+def choco_step(
+    state: ChocoState,
+    batch: object,
+    grad_fn: GradFn,
+    b: jax.Array,
+    lr: float,
+    comp: Compressor,
+    gossip_gamma: float = 0.5,
+) -> Tuple[ChocoState, dict]:
+    key = jax.random.fold_in(state.key, state.step)
+    losses, grads = _node_grads(grad_fn, state.params, batch, key)
+    half = _axpy(-lr, grads, state.params)               # x^{t+1/2}
+    q = _compress_tree(comp, jax.random.fold_in(key, 7), _sub(half, state.hats))
+    hats = _add(state.hats, q)                            # \hat x^{t+1}
+    mixed = _mix(b, hats)                                 # sum_j B_ji \hat x_j
+    correction = jax.tree_util.tree_map(
+        lambda mx, h: gossip_gamma * (mx - h), mixed, hats
+    )
+    new_params = _add(half, correction)
+    return (
+        ChocoState(new_params, hats, state.step + 1, state.key),
+        {"loss_mean": jnp.mean(losses)},
+    )
+
+
+# --------------------------------------------------------------------------
+# BEER — compressed gradient tracking (O(1/T) nonconvex rate)
+# --------------------------------------------------------------------------
+class BeerState(NamedTuple):
+    params: object  # x
+    h: object       # surrogate of x
+    g: object       # gradient tracker
+    z: object       # surrogate of g
+    prev_grad: object
+    step: jax.Array
+    key: jax.Array
+
+
+def beer_init(
+    key: jax.Array, params_stacked: object, batch0: object, grad_fn: GradFn
+) -> BeerState:
+    _, g0 = _node_grads(grad_fn, params_stacked, batch0, key)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    return BeerState(
+        params_stacked, zeros, g0, zeros, g0, jnp.zeros((), jnp.int32), key
+    )
+
+
+def beer_step(
+    state: BeerState,
+    batch: object,
+    grad_fn: GradFn,
+    b: jax.Array,
+    lr: float,
+    comp: Compressor,
+    gossip_gamma: float = 0.5,
+) -> Tuple[BeerState, dict]:
+    key = jax.random.fold_in(state.key, state.step)
+    w_minus_i = b - jnp.eye(b.shape[0], dtype=b.dtype)
+    # x update: mix surrogates, descend tracker
+    mix_h = jax.tree_util.tree_map(
+        lambda h: jnp.einsum("ji,j...->i...", w_minus_i.astype(h.dtype), h),
+        state.h,
+    )
+    x_new = jax.tree_util.tree_map(
+        lambda x, mh, g: x + gossip_gamma * mh - lr * g,
+        state.params, mix_h, state.g,
+    )
+    h_new = _add(
+        state.h,
+        _compress_tree(comp, jax.random.fold_in(key, 3), _sub(x_new, state.h)),
+    )
+    losses, grad_new = _node_grads(grad_fn, x_new, batch, key)
+    mix_z = jax.tree_util.tree_map(
+        lambda z: jnp.einsum("ji,j...->i...", w_minus_i.astype(z.dtype), z),
+        state.z,
+    )
+    g_new = jax.tree_util.tree_map(
+        lambda g, mz, gn, gp: g + gossip_gamma * mz + gn - gp,
+        state.g, mix_z, grad_new, state.prev_grad,
+    )
+    z_new = _add(
+        state.z,
+        _compress_tree(comp, jax.random.fold_in(key, 5), _sub(g_new, state.z)),
+    )
+    return (
+        BeerState(x_new, h_new, g_new, z_new, grad_new, state.step + 1, state.key),
+        {"loss_mean": jnp.mean(losses)},
+    )
+
+
+# --------------------------------------------------------------------------
+# (AN)Q-NIDS — NIDS with (adaptively) quantized messages
+# --------------------------------------------------------------------------
+class NidsState(NamedTuple):
+    params: object       # x^k
+    prev_params: object  # x^{k-1}
+    prev_grad: object
+    hats: object         # \hat u — difference-encoded public message state
+    step: jax.Array
+    key: jax.Array
+
+
+def nids_init(
+    key: jax.Array, params_stacked: object, batch0: object, grad_fn: GradFn, lr: float
+) -> NidsState:
+    _, g0 = _node_grads(grad_fn, params_stacked, batch0, key)
+    x1 = _axpy(-lr, g0, params_stacked)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    return NidsState(x1, params_stacked, g0, zeros, jnp.ones((), jnp.int32), key)
+
+
+def nids_step(
+    state: NidsState,
+    batch: object,
+    grad_fn: GradFn,
+    b: jax.Array,
+    lr: float,
+    comp: Optional[Compressor] = None,
+) -> Tuple[NidsState, dict]:
+    r"""x^{k+1} = Atilde(2x^k - x^{k-1} - lr (grad^k - grad^{k-1})),
+    Atilde = (I + B)/2.
+
+    With comp != None this is the (AN)Q-NIDS variant: nodes transmit the
+    quantized *innovation* q = Q(u - \hat u) and both ends update the public
+    surrogate \hat u += q.  Because u^k converges, the innovation (and thus
+    the quantization error) vanishes — the paper's "adaptive" finite-bit
+    quantization, emulated with difference encoding.
+    """
+    key = jax.random.fold_in(state.key, state.step)
+    losses, grad_k = _node_grads(grad_fn, state.params, batch, key)
+    u = jax.tree_util.tree_map(
+        lambda x, xp, g, gp: 2.0 * x - xp - lr * (g - gp),
+        state.params, state.prev_params, grad_k, state.prev_grad,
+    )
+    a_tilde = 0.5 * (jnp.eye(b.shape[0], dtype=b.dtype) + b)
+    if comp is not None:
+        q = _compress_tree(comp, jax.random.fold_in(key, 11), _sub(u, state.hats))
+        hats = _add(state.hats, q)
+        # node keeps its own exact copy; only off-diagonal mixing is lossy
+        diag = jnp.diag(a_tilde)
+        off = a_tilde - jnp.diag(diag)
+        mixed = jax.tree_util.tree_map(
+            lambda uh, ue: jnp.einsum("ji,j...->i...", off.astype(uh.dtype), uh)
+            + ue * diag.reshape((-1,) + (1,) * (ue.ndim - 1)).astype(ue.dtype),
+            hats, u,
+        )
+    else:
+        hats = state.hats
+        mixed = _mix(a_tilde, u)
+    return (
+        NidsState(mixed, state.params, grad_k, hats, state.step + 1, state.key),
+        {"loss_mean": jnp.mean(losses)},
+    )
+
+
+# --------------------------------------------------------------------------
+# Generic driver — used by benchmarks to race algorithms fairly
+# --------------------------------------------------------------------------
+def run_algorithm(
+    step_fn: Callable,  # (state, batch) -> (state, metrics), already closed over hps
+    state,
+    batch_fn: Callable[[int], object],
+    num_steps: int,
+    objective_fn: Optional[Callable[[object], jax.Array]] = None,
+    params_of=lambda s: s.params,
+    tol_std: float = 1e-3,
+) -> Tuple[object, dict]:
+    import numpy as np
+
+    step = jax.jit(step_fn)
+    history = {"loss": [], "objective": []}
+    f_window: list = []
+    for k in range(num_steps):
+        state, metrics = step(state, batch_fn(k))
+        history["loss"].append(float(metrics["loss_mean"]))
+        if objective_fn is not None:
+            mean_params = jax.tree_util.tree_map(
+                lambda x: x.mean(axis=0), params_of(state)
+            )
+            fval = float(objective_fn(mean_params))
+            history["objective"].append(fval)
+            f_window.append(fval)
+            if len(f_window) >= 3 and float(np.std(f_window[-3:])) < tol_std:
+                break
+    history["steps_run"] = len(history["loss"])
+    return state, history

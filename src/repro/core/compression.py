@@ -1,0 +1,93 @@
+"""Compression operators used by the baseline DFL algorithms.
+
+Each operator maps a vector to its compressed-then-decompressed form (the
+simulation works on dense vectors) and reports the wire cost in bits, so the
+communication-volume benchmarks (paper Figs. 9–10) can account traffic per
+algorithm consistently with PaME's Eq. (8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressor", "identity", "rand_k", "top_k", "qsgd", "one_bit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    name: str
+    # (key, x) -> decompressed x_hat
+    apply: Callable[[jax.Array, jax.Array], jax.Array]
+    # n -> bits on the wire per message
+    bits: Callable[[int], int]
+
+
+def identity() -> Compressor:
+    return Compressor("identity", lambda key, x: x, lambda n: 64 * n)
+
+
+def rand_k(frac: float, value_bits: int = 64, rescale: bool = True) -> Compressor:
+    """rand-k sparsifier.  rescale=True gives the *unbiased* operator
+    (E C(x) = x, variance (n/s-1)||x||^2); rescale=False gives the
+    *contractive* operator (||C(x)-x||^2 <= (1-s/n)||x||^2) required by
+    error-feedback methods such as CHOCO-SGD and BEER."""
+
+    def apply(key: jax.Array, x: jax.Array) -> jax.Array:
+        n = x.shape[-1]
+        s = max(1, int(round(frac * n)))
+        u = jax.random.uniform(key, x.shape)
+        ranks = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1)
+        mask = ranks < s
+        return jnp.where(mask, x * (n / s) if rescale else x, 0.0)
+
+    def bits(n: int) -> int:
+        s = max(1, int(round(frac * n)))
+        return (value_bits - 1) * s + n
+
+    return Compressor(f"rand{frac:g}", apply, bits)
+
+
+def top_k(frac: float, value_bits: int = 64) -> Compressor:
+    def apply(key: jax.Array, x: jax.Array) -> jax.Array:
+        n = x.shape[-1]
+        s = max(1, int(round(frac * n)))
+        ranks = jnp.argsort(jnp.argsort(-jnp.abs(x), axis=-1), axis=-1)
+        return jnp.where(ranks < s, x, 0.0)
+
+    def bits(n: int) -> int:
+        s = max(1, int(round(frac * n)))
+        return (value_bits - 1) * s + n
+
+    return Compressor(f"top{frac:g}", apply, bits)
+
+
+def qsgd(levels: int = 16) -> Compressor:
+    """QSGD stochastic quantization to `levels` levels per sign."""
+
+    def apply(key: jax.Array, x: jax.Array) -> jax.Array:
+        norm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        norm = jnp.maximum(norm, 1e-12)
+        y = jnp.abs(x) / norm * levels
+        lo = jnp.floor(y)
+        prob = y - lo
+        bump = jax.random.bernoulli(key, prob, x.shape)
+        q = (lo + bump) / levels
+        return jnp.sign(x) * q * norm
+
+    import math
+
+    per_coord = 1 + math.ceil(math.log2(levels + 1))
+    return Compressor(f"qsgd{levels}", apply, lambda n: 32 + per_coord * n)
+
+
+def one_bit() -> Compressor:
+    """Sign compression with per-message scale (1-bit SGD style)."""
+
+    def apply(key: jax.Array, x: jax.Array) -> jax.Array:
+        scale = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+        return jnp.sign(x) * scale
+
+    return Compressor("onebit", apply, lambda n: 32 + n)

@@ -1,0 +1,218 @@
+"""PaME — Algorithm 1 of the paper, as a functional JAX step.
+
+All m nodes are simulated inside one SPMD program: every state leaf carries
+a leading node axis [m, ...].  Per-node randomness (neighbor selection,
+coordinate masks, sub-batches) is counter-based via fold_in(step), so nodes
+behave independently without a coordinator — the paper's "partially
+synchronized" regime.
+
+Update rule (lines 4–14):
+    k in K_i:  v_i = PME(w_i, {w_j : j in N_i^k}),  N_i^k ~ U(N_i, t_i)
+    else:      v_i = w_i
+    w_i^{k+1}  = v_i - grad f_i(v_i; B_i^k) / (sigma_i^k * t_i)
+    sigma_i^{k+1} = gamma_i * sigma_i^k
+
+The non-communicating branch is realised by zeroing the receiver's column
+of the selection matrix A, which drives every coordinate count to zero and
+makes PME return w_i exactly — one fused code path, no per-node cond.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pme
+from repro.core.topology import Topology
+
+__all__ = ["PaMEConfig", "PaMEState", "TopologyArrays", "pame_init", "pame_step", "run_pame"]
+
+# grad_fn(params_i, batch_i, key) -> (loss_i, grads_i)
+GradFn = Callable[[object, object, jax.Array], Tuple[jax.Array, object]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PaMEConfig:
+    """Hyper-parameters of Algorithm 1 (paper Table II defaults)."""
+
+    nu: float = 0.2          # participation rate nu_i
+    p: float = 0.2           # transmission rate s/n
+    gamma: float = 1.005     # penalty growth gamma_i > 1
+    sigma0: float = 1.0      # initial penalty sigma_i^0
+    kappa_lo: int = 3        # communication period interval [lo, hi]
+    kappa_hi: int = 7
+    mask_mode: str = "exact"  # "exact" (paper) | "bernoulli" (huge leaves)
+    homogeneous_kappa: Optional[int] = None  # set to force kappa_i = k0
+    exchange: str = "dense"  # "dense" (paper-faithful simulation) |
+                             # "compressed" (block-systematic payloads, the
+                             # beyond-paper wire format — core.gossip) |
+                             # "compressed_q8" (int8 payloads on the wire)
+
+
+class TopologyArrays(NamedTuple):
+    """Device-side view of a Topology for use inside jit."""
+
+    nbrs: jax.Array   # [m, d] padded neighbor ids
+    valid: jax.Array  # [m, d] bool
+    t: jax.Array      # [m] t_i = max(1, floor(nu_i |N_i|))
+    kappa: jax.Array  # [m] per-node communication periods
+
+
+class PaMEState(NamedTuple):
+    params: object     # pytree, leaves [m, ...]
+    sigma: jax.Array   # [m]
+    step: jax.Array    # int32 scalar
+    key: jax.Array     # PRNG key
+
+
+def make_topology_arrays(
+    topo: Topology, cfg: PaMEConfig, seed: int = 0
+) -> TopologyArrays:
+    nbrs, valid = topo.neighbor_matrix_padded()
+    deg = topo.degrees
+    t = np.maximum(1, np.floor(cfg.nu * deg)).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    if cfg.homogeneous_kappa is not None:
+        kappa = np.full(topo.m, cfg.homogeneous_kappa, dtype=np.int32)
+    else:
+        kappa = rng.integers(cfg.kappa_lo, cfg.kappa_hi + 1, topo.m).astype(np.int32)
+    return TopologyArrays(
+        nbrs=jnp.asarray(nbrs),
+        valid=jnp.asarray(valid),
+        t=jnp.asarray(t),
+        kappa=jnp.asarray(kappa),
+    )
+
+
+def pame_init(key: jax.Array, params_stacked: object, m: int, cfg: PaMEConfig) -> PaMEState:
+    """W^0 = 0 per Setup 1 is the caller's choice; any stacked init works
+    as long as it lies in N(delta) (Lemma 3)."""
+    del m
+    leaves = jax.tree_util.tree_leaves(params_stacked)
+    m_ = leaves[0].shape[0]
+    return PaMEState(
+        params=params_stacked,
+        sigma=jnp.full((m_,), cfg.sigma0, dtype=jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def _tree_scale_sub(base, grads, scale):
+    """base - grads * scale[node] broadcast over trailing dims."""
+
+    def one(b, g):
+        s = scale.reshape((-1,) + (1,) * (b.ndim - 1))
+        return b - g * s.astype(b.dtype)
+
+    return jax.tree_util.tree_map(one, base, grads)
+
+
+def pame_step(
+    state: PaMEState,
+    batch: object,  # pytree, leaves [m, ...] (per-node sub-batches B_i^k)
+    grad_fn: GradFn,
+    topo: TopologyArrays,
+    cfg: PaMEConfig,
+    param_shardings: Optional[object] = None,  # pin v_bar's layout so the
+    # gossip einsum cannot re-shard the whole model compute downstream
+) -> Tuple[PaMEState, dict]:
+    m = topo.nbrs.shape[0]
+    k_sel, k_mask, k_data = (
+        jax.random.fold_in(state.key, state.step * 3 + i) for i in range(3)
+    )
+
+    comm_mask = (state.step % topo.kappa) == 0  # k in K_i
+    a = pme.sample_neighbor_selection(
+        k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
+    )
+    if cfg.exchange in ("compressed", "compressed_q8"):
+        from repro.core import gossip
+
+        v_bar = gossip.compressed_pme_average_pytree(
+            k_mask, state.params, a, cfg.p, shardings=param_shardings,
+            quantize_bits=8 if cfg.exchange == "compressed_q8" else 0,
+        )
+    else:
+        v_bar = pme.pme_average_pytree(
+            k_mask, state.params, a, cfg.p, mode=cfg.mask_mode
+        )
+    if param_shardings is not None:
+        v_bar = jax.lax.with_sharding_constraint(v_bar, param_shardings)
+
+    node_keys = jax.random.split(k_data, m)
+    losses, grads = jax.vmap(grad_fn)(v_bar, batch, node_keys)
+
+    stepsize = 1.0 / (state.sigma * topo.t.astype(jnp.float32))
+    new_params = _tree_scale_sub(v_bar, grads, stepsize)
+
+    # consensus error ||W - Pi||_F^2 (metric of Lemma 6)
+    def _cons(leaf):
+        mean = leaf.mean(axis=0, keepdims=True)
+        return jnp.sum((leaf - mean) ** 2)
+
+    consensus = sum(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(_cons, new_params)
+    ))
+
+    new_state = PaMEState(
+        params=new_params,
+        sigma=state.sigma * cfg.gamma,
+        step=state.step + 1,
+        key=state.key,
+    )
+    metrics = {
+        "loss_mean": jnp.mean(losses),
+        "consensus": consensus,
+        "comm_nodes": jnp.sum(comm_mask.astype(jnp.int32)),
+        "sigma_mean": jnp.mean(new_state.sigma),
+    }
+    return new_state, metrics
+
+
+def run_pame(
+    key: jax.Array,
+    params0: object,  # single-node pytree; will be stacked m times
+    m: int,
+    grad_fn: GradFn,
+    batch_fn: Callable[[int], object],  # step -> per-node batch pytree [m,...]
+    topo: Topology,
+    cfg: PaMEConfig,
+    num_steps: int = 200,
+    objective_fn: Optional[Callable[[object], jax.Array]] = None,
+    tol_std: float = 1e-3,
+    seed: int = 0,
+) -> Tuple[PaMEState, dict]:
+    """Host-side driver with the paper's termination rule:
+    stop when std{f(w^{k-2}), f(w^{k-1}), f(w^k)} < 1e-3."""
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
+    )
+    topo_arrays = make_topology_arrays(topo, cfg, seed=seed)
+    state = pame_init(key, stacked, m, cfg)
+
+    step = jax.jit(
+        lambda s, b: pame_step(s, b, grad_fn, topo_arrays, cfg)
+    )
+    history = {"loss": [], "objective": [], "consensus": [], "bits": []}
+    f_window: list = []
+    d = int(np.asarray(topo_arrays.t).sum())  # messages per full comm round
+    for k in range(num_steps):
+        batch = batch_fn(k)
+        state, metrics = step(state, batch)
+        history["loss"].append(float(metrics["loss_mean"]))
+        history["consensus"].append(float(metrics["consensus"]))
+        if objective_fn is not None:
+            mean_params = jax.tree_util.tree_map(
+                lambda x: x.mean(axis=0), state.params
+            )
+            fval = float(objective_fn(mean_params))
+            history["objective"].append(fval)
+            f_window.append(fval)
+            if len(f_window) >= 3 and float(np.std(f_window[-3:])) < tol_std:
+                break
+    history["steps_run"] = len(history["loss"])
+    return state, history

@@ -1,0 +1,169 @@
+"""Partial Message Exchange (PME) — Algorithm 2 of the PaME paper.
+
+Every selected neighbor j of node i transmits only s_j randomly chosen
+coordinates of w_j; node i averages coordinate l over the lambda_{i,l}
+neighbors that sent it and fills missing coordinates from its own w_i.
+
+Two mask samplers are provided:
+  * "exact"     — s coordinates chosen uniformly *without replacement*
+                  (the paper's scheme; Theorem 1 applies verbatim);
+  * "bernoulli" — each coordinate kept i.i.d. with prob p = s/n
+                  (same mean traffic, used for very large parameter leaves
+                  where an argsort over n is wasteful).
+
+The aggregation itself is written as dense masked matmuls over the node
+axis — TPU-native (MXU) data movement; under GSPMD the node-axis einsums
+lower to all-gathers across the (pod, data) mesh axes.  A compressed
+payload path (values + PRNG seed instead of dense masked vectors) lives in
+`repro.core.gossip` and `repro.kernels.pme_average`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sample_coordinate_masks",
+    "sample_neighbor_selection",
+    "pme_average",
+    "pme_average_pytree",
+    "naive_average",
+    "message_bits",
+]
+
+
+def sample_coordinate_masks(
+    key: jax.Array,
+    m: int,
+    n: int,
+    s: int,
+    mode: str = "exact",
+) -> jax.Array:
+    """Per-sender coordinate masks M: [m, n] bool, |M_j| = s (exact mode).
+
+    Node j draws T_j^k subset of [n] with |T_j^k| = s, uniformly without
+    replacement, independently across nodes (Setup 1.3).
+    """
+    if mode == "exact":
+        u = jax.random.uniform(key, (m, n))
+        # rank of each entry within its row; keep the s smallest.
+        ranks = jnp.argsort(jnp.argsort(u, axis=1), axis=1)
+        return ranks < s
+    elif mode == "bernoulli":
+        p = s / n
+        return jax.random.bernoulli(key, p, (m, n))
+    raise ValueError(f"unknown mask mode {mode!r}")
+
+
+def sample_neighbor_selection(
+    key: jax.Array,
+    nbrs: jax.Array,  # [m, d] padded neighbor ids
+    valid: jax.Array,  # [m, d] bool
+    t: jax.Array,  # [m] int — t_i = floor(nu_i * |N_i|), >= 1
+    comm_mask: jax.Array,  # [m] bool — k in K_i?
+) -> jax.Array:
+    """Random neighbor selection N_i^k (Alg. 1 line 5) as a matrix A.
+
+    Returns A: [m, m] float where A[j, i] = 1 iff node j is a selected
+    neighbor of receiver i this round (column i describes N_i^k).  Columns
+    of non-communicating receivers are all-zero, which makes every
+    coordinate count lambda_{i,l} = 0 and PME fall back to w_i — exactly
+    the "local parameter tracking" branch (Alg. 1 line 9).
+    """
+    m, d = nbrs.shape
+    u = jax.random.uniform(key, (m, d))
+    u = jnp.where(valid, u, jnp.inf)  # never pick padding
+    ranks = jnp.argsort(jnp.argsort(u, axis=1), axis=1)
+    sel = (ranks < t[:, None]) & valid  # [m, d] — receiver i picks these
+    # scatter into dense A: receiver on columns.
+    onehot = jax.nn.one_hot(nbrs, m, dtype=jnp.float32)  # [m, d, m] sender id
+    a_rows_by_receiver = jnp.einsum(
+        "idm,id->im", onehot, sel.astype(jnp.float32)
+    )  # [receiver, sender]
+    a = a_rows_by_receiver.T  # A[sender, receiver]
+    return a * comm_mask[None, :].astype(a.dtype)
+
+
+def pme_average(
+    w: jax.Array,  # [m, n] node-stacked parameters
+    masks: jax.Array,  # [m, n] bool per-sender coordinate masks
+    a: jax.Array,  # [m, m] selection matrix, A[j, i] = j in N_i^k
+) -> jax.Array:
+    """Count-weighted PME average — Alg. 2 line 6, Eq. (6)/(7).
+
+    v_bar[i, l] = sum_{j in N_i^k, l in T_j} w[j, l] / lambda_{i,l}
+    with fallback w[i, l] when lambda_{i,l} = 0.
+    """
+    wm = jnp.where(masks, w, 0.0)
+    agg = jnp.einsum("jn,ji->in", wm, a)  # sum of received coords
+    cnt = jnp.einsum("jn,ji->in", masks.astype(w.dtype), a)  # lambda_{i,l}
+    return jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), w)
+
+
+def naive_average(
+    w: jax.Array,
+    masks: jax.Array,
+    a: jax.Array,
+) -> jax.Array:
+    """The *biased* strawman of Theorem 1: divide by |N_i^k| instead of
+    lambda_{i,l}.  Expectation is (s/n) * mean — kept for tests/benchmarks."""
+    wm = jnp.where(masks, w, 0.0)
+    agg = jnp.einsum("jn,ji->in", wm, a)
+    t = jnp.maximum(a.sum(axis=0), 1.0)  # |N_i^k| per receiver
+    return agg / t[:, None]
+
+
+def pme_average_pytree(
+    key: jax.Array,
+    params: object,  # pytree with [m, ...] leaves
+    a: jax.Array,
+    p: float,
+    mode: str = "bernoulli",
+) -> object:
+    """Apply PME leaf-wise to a node-stacked parameter pytree.
+
+    Each leaf is treated as its own message segment with the same keep
+    fraction p = s/n; the coordinate mask of sender j is regenerated from
+    `key` fold_in'd with the leaf index, mirroring the seed-based wire
+    format (only values + a seed move between nodes).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    m = leaves[0].shape[0]
+    out = []
+    for idx, leaf in enumerate(leaves):
+        lkey = jax.random.fold_in(key, idx)
+        if mode == "exact":
+            flat = leaf.reshape(m, -1)
+            n = flat.shape[1]
+            s = max(1, int(round(p * n)))
+            masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
+            out.append(pme_average(flat, masks, a).reshape(leaf.shape))
+        else:
+            # No reshape: keep the leaf's trailing structure (and thus its
+            # tensor sharding) intact; only the node axis is contracted.
+            # Operands stay in the leaf dtype (bf16 at model scale) with f32
+            # accumulation — counts <= m are exactly representable.
+            masks = jax.random.bernoulli(lkey, p, leaf.shape)
+            mask_t = masks.astype(leaf.dtype)
+            a_t = a.astype(leaf.dtype)
+            agg = jnp.einsum(
+                "j...,ji->i...", leaf * mask_t, a_t,
+                preferred_element_type=jnp.float32,
+            )
+            cnt = jnp.einsum(
+                "j...,ji->i...", mask_t, a_t, preferred_element_type=jnp.float32
+            )
+            avg = jnp.where(
+                cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(leaf.dtype), leaf
+            )
+            out.append(avg)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def message_bits(s: int, n: int, value_bits: int = 64) -> int:
+    """Eq. (8): transmitting a sparse vector costs (value_bits-1)*s + n bits
+    (s payload values + an n-bit occupancy pattern); 64-bit gives 63s + n."""
+    return (value_bits - 1) * s + n

@@ -1,0 +1,12 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticClassification,
+    SyntheticTokens,
+    make_linear_regression,
+    make_logistic_regression,
+)
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    label_skew_partition,
+    iid_partition,
+)
+from repro.data.pipeline import NodeBatcher  # noqa: F401

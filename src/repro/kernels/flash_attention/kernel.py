@@ -1,0 +1,126 @@
+"""Blockwise causal GQA flash attention (opt. sliding window) — Pallas TPU.
+
+Grid (batch, q_head, q_block, kv_block); the kv axis is the innermost
+"arbitrary" dimension so the online-softmax state (running max m, running
+denominator l, output accumulator) lives in VMEM scratch across kv steps.
+Per q block the working set is q[bq,d] + k/v[bk,d] + acc[bq,d] — sized so
+bq = bk = 128 with d <= 256 fits comfortably in the ~16 MB v5e VMEM.
+
+GQA is handled in the index map: q head h reads kv head h // (H // KV).
+Causal and sliding-window masks are applied with global-position iota; kv
+blocks entirely outside the (window, causal) band are skipped via pl.when
+on block bounds, so the compute volume matches the mask's true area.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, bq, bk,
+            seq_len, window):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # block-level causal/window culling
+    causal_ok = k_lo <= q_lo + bq - 1
+    window_ok = True
+    if window is not None:
+        window_ok = (k_lo + bk - 1) >= (q_lo - window + 1)
+
+    @pl.when(causal_ok & window_ok if window is not None else causal_ok)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols <= rows
+        if window is not None:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, S, KV, D]
+    v: jax.Array,  # [B, S, KV, D]
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    if s % bq or s % bk:
+        raise ValueError(f"seq {s} must be divisible by blocks ({bq},{bk})")
+    grid = (b, h, s // bq, s // bk)
+    # operands laid out [B, heads, S, D] for clean blocking
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kernel = functools.partial(
+        _kernel, scale=d**-0.5, bq=bq, bk=bk, seq_len=s, window=window
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ) if not interpret else None,
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Public flash-attention wrapper (interpret on CPU, Mosaic on TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    interpret = jax.default_backend() == "cpu"
+    bq = min(block_q, q.shape[1])
+    bk = min(block_k, q.shape[1])
+    return flash_attention_pallas(
+        q, k, v, window=window, block_q=bq, block_k=bk, interpret=interpret
+    )

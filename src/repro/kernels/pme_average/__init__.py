@@ -1,0 +1,1 @@
+from repro.kernels.pme_average.ops import pme_average  # noqa: F401

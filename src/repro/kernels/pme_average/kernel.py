@@ -1,0 +1,67 @@
+"""Fused PME count-weighted average — Pallas TPU kernel.
+
+For a coordinate tile of width BN:
+    agg[i, l] = sum_j A[j, i] * M[j, l] * W[j, l]     (MXU matmul)
+    cnt[i, l] = sum_j A[j, i] * M[j, l]               (MXU matmul)
+    out[i, l] = cnt > 0 ? agg / cnt : W[i, l]         (VPU select)
+
+W/M tiles stream HBM->VMEM along the coordinate axis; the selection matrix
+A^T (m x m, m = #nodes <= a few hundred) stays resident in VMEM across the
+whole grid.  The fusion avoids materialising the masked copy of W and the
+count tensor in HBM — on a v5e this takes the op from 4 HBM round trips of
+the [m, n] operand down to 1 read + 1 write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(at_ref, w_ref, m_ref, out_ref):
+    # f32 compute: exact counts, and the CPU interpreter lacks bf16 dots;
+    # on TPU the converts fuse into the MXU matmul.
+    a_t = at_ref[...].astype(jnp.float32)   # [m, m]  A^T, receiver-major
+    w = w_ref[...]                          # [m, BN]
+    mask = m_ref[...].astype(jnp.float32)   # [m, BN] (0/1)
+    wf = w.astype(jnp.float32)
+    wm = wf * mask
+    agg = jnp.dot(a_t, wm, preferred_element_type=jnp.float32)
+    cnt = jnp.dot(a_t, mask, preferred_element_type=jnp.float32)
+    out = jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), wf)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pme_average_pallas(
+    w: jax.Array,      # [m, n]
+    masks: jax.Array,  # [m, n] same dtype as w (0/1)
+    a: jax.Array,      # [m, m] selection, A[j, i] = j in N_i^k
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = w.shape
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        masks = jnp.pad(masks, ((0, 0), (0, pad)))
+    grid = ((n + pad) // bn,)
+    a_t = a.T.astype(w.dtype)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, m), lambda j: (0, 0)),    # A^T resident
+            pl.BlockSpec((m, bn), lambda j: (0, j)),   # W tile
+            pl.BlockSpec((m, bn), lambda j: (0, j)),   # mask tile
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n + pad), w.dtype),
+        interpret=interpret,
+    )(a_t, w, masks)
+    return out[:, :n] if pad else out

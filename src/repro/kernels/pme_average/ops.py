@@ -1,0 +1,19 @@
+"""Public wrapper: picks interpret mode on CPU, kernel on TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pme_average.kernel import pme_average_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pme_average(
+    w: jax.Array, masks: jax.Array, a: jax.Array, block_n: int = 512
+) -> jax.Array:
+    """Count-weighted PME average; masks may be bool or numeric."""
+    masks = masks.astype(w.dtype)
+    return pme_average_pallas(w, masks, a, block_n=block_n, interpret=_on_cpu())

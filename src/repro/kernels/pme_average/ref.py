@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the PME average kernel (same math as core.pme)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pme_average_ref(w: jax.Array, masks: jax.Array, a: jax.Array) -> jax.Array:
+    maskf = masks.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    agg = jnp.einsum("jn,ji->in", wf * maskf, a.astype(jnp.float32))
+    cnt = jnp.einsum("jn,ji->in", maskf, a.astype(jnp.float32))
+    out = jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), wf)
+    return out.astype(w.dtype)

@@ -1,0 +1,11 @@
+"""Public wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
+
+
+def ssd_intra_chunk(xc, dtc, cum, bc, cc, rep: int):
+    interpret = jax.default_backend() == "cpu"
+    return ssd_intra_chunk_pallas(xc, dtc, cum, bc, cc, rep, interpret=interpret)

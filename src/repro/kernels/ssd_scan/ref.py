@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the SSD intra-chunk contraction (and a fully naive
+sequential recurrence used to cross-check both implementations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, rep):
+    """Same contraction as the kernel, in plain einsums.
+
+    xc [B,Nc,L,H,P], dtc/cum [B,Nc,L,H], bc/cc [B,Nc,L,G,N] ->
+    (y [B,Nc,L,H,P], state [B,Nc,H,P,N]).
+    """
+    l = xc.shape[2]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,Nc,L,L,H]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    bh = jnp.repeat(bc, rep, axis=3)
+    ch = jnp.repeat(cc, rep, axis=3)
+    scores = jnp.einsum("bnlhs,bnmhs->bnlmh", ch, bh)
+    w = scores * lmat * dtc[:, :, None, :, :]
+    y = jnp.einsum("bnlmh,bnmhp->bnlhp", w.astype(xc.dtype), xc)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    wstate = (decay_to_end * dtc)[..., None] * bh
+    state = jnp.einsum("bnlhs,bnlhp->bnhps", wstate.astype(xc.dtype), xc)
+    return y, state.astype(jnp.float32)
+
+
+def ssd_sequential_ref(x, dt, a, b_, c_, rep):
+    """Token-by-token recurrence (ground truth for the whole SSD layer).
+
+    x [B,S,H,P], dt [B,S,H], a [H], b_/c_ [B,S,G,N] -> y [B,S,H,P]."""
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    bh = jnp.repeat(b_, rep, axis=2)
+    ch = jnp.repeat(c_, rep, axis=2)
+
+    def step(state, t):
+        da = jnp.exp(dt[:, t] * a[None])  # [B,H]
+        contrib = (dt[:, t][..., None, None] * x[:, t][..., None]) * bh[:, t][:, :, None, :]
+        state = state * da[..., None, None] + contrib
+        y = jnp.einsum("bhpn,bhn->bhp", state, ch[:, t])
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3)  # [B,S,H,P]

@@ -1,0 +1,363 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before jax initialises devices):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per combo it records compiled.memory_analysis(), cost_analysis() (flops /
+bytes are PER DEVICE on the partitioned module) and the collective-op
+bytes parsed from the post-SPMD HLO text — the three §Roofline inputs.
+Results accumulate incrementally in benchmarks/artifacts/dryrun.json so
+interrupted sweeps resume.
+"""
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_arch_names, get_config
+from repro.configs.shapes import (
+    INPUT_SHAPES,
+    cache_capacity,
+    config_for_shape,
+    input_specs,
+)
+from repro.core.pame import (
+    PaMEConfig,
+    PaMEState,
+    make_topology_arrays,
+    pame_step,
+)
+from repro.core.topology import build_topology
+from repro.launch.mesh import make_logical_mesh, make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, init_params, prefill, train_loss
+from repro import sharding as shd
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind (per-device view).
+
+    all-reduce counts x2 (reduce-scatter + all-gather equivalent traffic).
+    """
+    out: Dict[str, int] = {}
+    for shape_txt, kind in _COLL_RE.findall(hlo_text):
+        b = _shape_bytes(shape_txt)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def build_train(cfg: ModelConfig, m: int, exchange: str = "dense"):
+    topo = build_topology("ring", m) if m > 2 else build_topology("complete", max(m, 2))
+    pcfg = PaMEConfig(
+        nu=0.5, p=0.2, gamma=1.001, sigma0=5.0,
+        mask_mode="bernoulli", homogeneous_kappa=4, exchange=exchange,
+    )
+    topo_arrays = make_topology_arrays(topo, pcfg)
+
+    def grad_fn(p, b, k):
+        del k
+        return jax.value_and_grad(lambda pp: train_loss(pp, cfg, b))(p)
+
+    def step(state, batch, param_shardings=None):
+        return pame_step(
+            state, batch, grad_fn, topo_arrays, pcfg,
+            param_shardings=param_shardings,
+        )
+
+    return step
+
+
+def train_state_specs(cfg: ModelConfig, m: int) -> PaMEState:
+    pshapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((m,) + s.shape, s.dtype), pshapes
+    )
+    return PaMEState(
+        params=stacked,
+        sigma=jax.ShapeDtypeStruct((m,), jnp.float32),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# one combo
+# ---------------------------------------------------------------------------
+def probe_depths(cfg: ModelConfig) -> tuple:
+    """Two reduced depths (full width!) compiled *unrolled* so XLA cost
+    analysis counts every layer; the roofline reader extrapolates linearly
+    to the real depth (lax.scan bodies are otherwise counted once)."""
+    if cfg.arch_type == "hybrid":
+        return (cfg.attn_every, 2 * cfg.attn_every)
+    if cfg.arch_type == "moe":
+        fd = cfg.first_dense_layers
+        return (fd + 2, fd + 4)
+    return (2, 4)
+
+
+# named perf variants for the §Perf hillclimb (dryrun --variant NAME);
+# model-config overrides + the PaME exchange mode
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "compressed": {"exchange": "compressed"},
+    "remat_dots": {"remat_policy": "dots"},
+    "compressed+dots": {"exchange": "compressed", "remat_policy": "dots"},
+    "chunked2048": {"prefill_chunk": 2048},
+    "chunked512": {"prefill_chunk": 512},
+    "chunked512+dots": {"prefill_chunk": 512, "remat_policy": "dots"},
+    # sharding-rule experiments (applied via repro.sharding.RULE_OVERRIDES)
+    "embed_vocab_only": {"_rules": {"embed": ("model", None)}},
+    "embed_vocab_only+compressed": {
+        "_rules": {"embed": ("model", None)}, "exchange": "compressed",
+    },
+    # mamba experiments: the (fsdp, model) column-sharded in_proj forces a
+    # reshard at the z/xBC/dt split; try unsharded columns instead
+    "mamba_nosplit_shard": {
+        "_rules": {
+            "mamba/in_proj": ("fsdp", None),
+            "mamba/out_proj": (None, "fsdp"),
+            "mamba/conv_w": (None, None),
+            "mamba/conv_b": (None,),
+        }
+    },
+    # proper fix: separate z/x/B/C/dt projections, head-aligned shards
+    "mamba_split_proj": {"ssm_split_proj": True},
+    # int8 payloads on the compressed wire
+    "compressed_q8": {"exchange": "compressed_q8"},
+}
+
+
+def run_combo(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    remat: bool = True,
+    probe_layers: Optional[int] = None,
+    variant: str = "baseline",
+) -> Dict:
+    shape = INPUT_SHAPES[shape_name]
+    base = get_config(arch)
+    cfg = config_for_shape(base, shape)
+    overrides = dict(VARIANTS[variant])
+    exchange = overrides.pop("exchange", "dense")
+    shd.RULE_OVERRIDES.clear()
+    shd.RULE_OVERRIDES.update(overrides.pop("_rules", {}))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if probe_layers is not None:
+        cfg = cfg.replace(n_layers=probe_layers, unroll=True)
+    if shape.kind == "train" and remat:
+        cfg = cfg.replace(remat=True)
+    multi = mesh_kind == "multi"
+    prod = make_production_mesh(multi_pod=multi)
+    # mesh layout always follows the FULL-depth config so reduced-depth
+    # probes land on the same (node, fsdp, model) layout they extrapolate to
+    mesh = make_logical_mesh(
+        config_for_shape(base, shape), multi_pod=multi, production=prod
+    )
+    node, fsdp, model = mesh.devices.shape
+    t0 = time.time()
+
+    if shape.kind == "train":
+        m = node
+        step = build_train(cfg, m, exchange=exchange)
+        state_specs = train_state_specs(cfg, m)
+        batch_specs = input_specs(cfg, shape, m_nodes=m)
+        state_sh = shd.state_shardings(state_specs, mesh)
+        in_sh = (state_sh, shd.batch_shardings(batch_specs, mesh, node_stacked=True))
+        bound = lambda s, b: step(s, b, param_shardings=state_sh.params)
+        with mesh:
+            lowered = jax.jit(bound, in_shardings=in_sh).lower(state_specs, batch_specs)
+    elif shape.kind == "prefill":
+        cap = cache_capacity(cfg, shape)
+        pshapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        batch_specs = input_specs(cfg, shape)
+        fn = lambda p, b: prefill(p, cfg, b, cap)
+        in_sh = (
+            shd.params_shardings(pshapes, mesh, node_stacked=False),
+            shd.batch_shardings(batch_specs, mesh, node_stacked=False),
+        )
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(pshapes, batch_specs)
+    else:  # decode
+        pshapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        specs = input_specs(cfg, shape)
+        fn = lambda p, tok, pos, cache: decode_step(p, cfg, tok, pos, cache)
+        in_sh = (
+            shd.params_shardings(pshapes, mesh, node_stacked=False),
+            shd.batch_shardings(specs["token"], mesh, node_stacked=False),
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            shd.cache_shardings(specs["cache"], mesh),
+        )
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(
+                pshapes, specs["token"], specs["pos"], specs["cache"]
+            )
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "probe_layers": probe_layers,
+        "n_layers": cfg.n_layers,
+        "layout": {"node": node, "fsdp": fsdp, "model": model},
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collective_bytes": colls,
+        "collective_bytes_total": float(sum(colls.values())),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "param_count": base.param_count(),
+        "active_param_count": base.active_param_count(),
+        "tokens": shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    tag = f"L{probe_layers}" if probe_layers else "full"
+    if variant != "baseline":
+        tag += f"/{variant}"
+    print(
+        f"[dryrun] {arch} x {shape_name} x {mesh_kind} [{tag}]"
+        f" (node={node},fsdp={fsdp},model={model})"
+        f" flops/dev={rec['flops_per_device']:.3e}"
+        f" bytes/dev={rec['bytes_per_device']:.3e}"
+        f" coll={rec['collective_bytes_total']:.3e}"
+        f" temp={mem.temp_size_in_bytes/1e9:.2f}GB"
+        f" compile={t_compile:.1f}s",
+        flush=True,
+    )
+    return rec
+
+
+def results_path() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+    d = os.path.join(root, "benchmarks", "artifacts")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, "dryrun.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument(
+        "--probes", action="store_true",
+        help="also compile the two reduced-depth UNROLLED probes per combo "
+        "(exact per-layer cost for roofline extrapolation)",
+    )
+    ap.add_argument(
+        "--variant", default="baseline", choices=list(VARIANTS),
+        help="perf variant for the §Perf hillclimb",
+    )
+    args = ap.parse_args()
+
+    archs = all_arch_names() if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = (
+        list(INPUT_SHAPES) if (args.all or args.shape in (None, "all")) else [args.shape]
+    )
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    path = results_path()
+    results: Dict[str, Dict] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                depth_list = [None]
+                if args.probes:
+                    depth_list += list(probe_depths(get_config(arch)))
+                for depth in depth_list:
+                    key = f"{arch}|{shape}|{mesh_kind}" + (
+                        f"|L{depth}" if depth else ""
+                    )
+                    if args.variant != "baseline":
+                        key += f"|{args.variant}"
+                    if key in results and not args.force:
+                        print(f"[dryrun] skip cached {key}", flush=True)
+                        continue
+                    try:
+                        rec = run_combo(
+                            arch, shape, mesh_kind,
+                            remat=not args.no_remat, probe_layers=depth,
+                            variant=args.variant,
+                        )
+                        results[key] = rec
+                        with open(path, "w") as f:
+                            json.dump(results, f, indent=1)
+                    except Exception as e:  # noqa: BLE001 - continue sweep
+                        failures.append((key, repr(e)[:500]))
+                        print(f"[dryrun] FAIL {key}: {e!r}", flush=True)
+    print(f"[dryrun] done: {len(results)} cached, {len(failures)} failures")
+    for k, e in failures:
+        print("  FAIL", k, e)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""End-to-end DFL training driver.
+
+Trains any registered architecture with PaME across m simulated nodes:
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --variant smoke --steps 100 --batch 8 --seq 128 --nodes 8
+
+On a real TPU slice the same driver shards the node-stacked state over the
+(node, fsdp, model) logical mesh; on CPU (tests/examples) everything runs
+on one device.  Substrate exercised: synthetic non-IID corpus -> NodeBatcher
+-> jitted pame_step -> metrics log + checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core.pame import (
+    PaMEConfig,
+    PaMEState,
+    make_topology_arrays,
+    pame_init,
+    pame_step,
+)
+from repro.core.topology import build_topology
+from repro.data.synthetic import SyntheticTokens
+from repro.models.model import init_params, train_loss
+
+
+def build_everything(args):
+    cfg = get_config(args.arch, args.variant)
+    if args.seq and cfg.arch_type == "vlm":
+        assert args.seq > cfg.n_patches, "seq must exceed n_patches for vlm"
+    m = args.nodes
+    topo = build_topology(args.topology, m, p=0.5, seed=args.seed)
+    pcfg = PaMEConfig(
+        nu=args.nu, p=args.p, gamma=args.gamma, sigma0=args.sigma0,
+        kappa_lo=args.kappa_lo, kappa_hi=args.kappa_hi,
+        mask_mode="bernoulli",
+    )
+    topo_arrays = make_topology_arrays(topo, pcfg, seed=args.seed)
+
+    corpus = SyntheticTokens.make(m, 65536, cfg.vocab, seed=args.seed)
+
+    def make_batch(step: int):
+        rng = np.random.default_rng(1000 + step)
+        starts = rng.integers(0, corpus.tokens.shape[1] - args.seq - 1, (m, args.batch))
+        toks = np.stack(
+            [
+                np.stack([corpus.tokens[i, s : s + args.seq] for s in starts[i]])
+                for i in range(m)
+            ]
+        )
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if cfg.arch_type == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (m, args.batch, cfg.n_patches, cfg.vision_dim), jnp.dtype(cfg.dtype)
+            )
+        return batch
+
+    def grad_fn(p, b, k):
+        del k
+        return jax.value_and_grad(lambda pp: train_loss(pp, cfg, b))(p)
+
+    params0 = init_params(jax.random.PRNGKey(args.seed), cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
+    )
+    state = pame_init(jax.random.PRNGKey(args.seed + 1), stacked, m, pcfg)
+
+    step_fn = jax.jit(lambda s, b: pame_step(s, b, grad_fn, topo_arrays, pcfg))
+    return cfg, state, step_fn, make_batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="per-node batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--topology", default="erdos_renyi")
+    ap.add_argument("--nu", type=float, default=0.5)
+    ap.add_argument("--p", type=float, default=0.2)
+    ap.add_argument("--gamma", type=float, default=1.001)
+    ap.add_argument("--sigma0", type=float, default=20.0)
+    ap.add_argument("--kappa-lo", type=int, default=3)
+    ap.add_argument("--kappa-hi", type=int, default=7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg, state, step_fn, make_batch = build_everything(args)
+    start = 0
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        from repro.checkpoint.store import latest_step
+
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(args.ckpt_dir, state, last)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    t0 = time.time()
+    for k in range(start, args.steps):
+        state, metrics = step_fn(state, make_batch(k))
+        if (k + 1) % args.log_every == 0 or k == args.steps - 1:
+            print(
+                f"[train] step={k+1} loss={float(metrics['loss_mean']):.4f}"
+                f" consensus={float(metrics['consensus']):.3e}"
+                f" comm_nodes={int(metrics['comm_nodes'])}"
+                f" sigma={float(metrics['sigma_mean']):.2f}"
+                f" ({(time.time()-t0)/(k-start+1):.2f}s/step)",
+                flush=True,
+            )
+        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, k + 1, state)
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""The paper's own vision models: the small CNN (Example 3) and
+ResNet-20 (Example 4), in pure JAX.
+
+Hardware-adaptation note (DESIGN.md §5): BatchNorm is replaced by
+GroupNorm.  BN's running statistics are known to break under non-IID
+federated data (each node's batch statistics diverge), and GN is the
+standard FL substitute; it also keeps the model purely functional.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cnn_init", "cnn_apply", "resnet20_init", "resnet20_apply", "ce_loss"]
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype) * (2.0 / fan) ** 0.5
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _group_norm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# Example 3 CNN: conv32-pool-conv64-pool-fc
+# ---------------------------------------------------------------------------
+def cnn_init(key: jax.Array, in_ch: int = 1, n_classes: int = 10) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(ks[0], 3, 3, in_ch, 32),
+        "c2": _conv_init(ks[1], 3, 3, 32, 64),
+        "fc1": jax.random.normal(ks[2], (7 * 7 * 64, 128)) * (7 * 7 * 64) ** -0.5,
+        "b1": jnp.zeros((128,)),
+        "fc2": jax.random.normal(ks[3], (128, n_classes)) * 128 ** -0.5,
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+    )
+
+
+def cnn_apply(params: dict, images: jax.Array) -> jax.Array:
+    x = jax.nn.relu(_conv(images, params["c1"]))
+    x = _pool(x)
+    x = jax.nn.relu(_conv(x, params["c2"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["b1"])
+    return x @ params["fc2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Example 4 ResNet-20 (CIFAR variant; widths 16/32/64, GN instead of BN)
+# ---------------------------------------------------------------------------
+def resnet20_init(key: jax.Array, in_ch: int = 3, n_classes: int = 10) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    params = {"stem": _conv_init(next(keys), 3, 3, in_ch, 16),
+              "stem_s": jnp.ones((16,)), "stem_b": jnp.zeros((16,))}
+    widths = [16, 32, 64]
+    blocks = []
+    cin = 16
+    for si, w in enumerate(widths):
+        for bi in range(3):
+            stride = _block_stride(si, bi)
+            blk = {
+                "c1": _conv_init(next(keys), 3, 3, cin, w),
+                "s1": jnp.ones((w,)), "b1": jnp.zeros((w,)),
+                "c2": _conv_init(next(keys), 3, 3, w, w),
+                "s2": jnp.ones((w,)), "b2": jnp.zeros((w,)),
+            }
+            if stride != 1 or cin != w:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, w)
+            blocks.append(blk)
+            cin = w
+    params["blocks"] = blocks
+    params["fc"] = jax.random.normal(next(keys), (64, n_classes)) * 64 ** -0.5
+    params["fc_b"] = jnp.zeros((n_classes,))
+    return params
+
+
+def _block_stride(stage: int, block: int) -> int:
+    return 2 if (stage > 0 and block == 0) else 1
+
+
+def resnet20_apply(params: dict, images: jax.Array) -> jax.Array:
+    x = jax.nn.relu(_group_norm(_conv(images, params["stem"]), params["stem_s"], params["stem_b"]))
+    for idx, blk in enumerate(params["blocks"]):
+        stride = _block_stride(idx // 3, idx % 3)
+        h = jax.nn.relu(_group_norm(_conv(x, blk["c1"], stride), blk["s1"], blk["b1"]))
+        h = _group_norm(_conv(h, blk["c2"]), blk["s2"], blk["b2"])
+        sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+        x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"] + params["fc_b"]
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

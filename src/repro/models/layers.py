@@ -1,0 +1,57 @@
+"""Shared primitives: norms, rope, initializers, projections."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "dense_init",
+    "embed_init",
+    "rope_freqs",
+    "apply_rope",
+    "linear",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype, fan_in: int = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...,] int -> (cos, sin) of shape [..., dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., dim]; cos/sin broadcastable to [..., dim/2] (interleaved pairs)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # broadcast cos/sin over the head axis if present
+    while cos.ndim < x1.ndim:
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

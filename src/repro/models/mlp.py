@@ -1,0 +1,22 @@
+"""SwiGLU feed-forward block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, linear
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d), dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    return linear(jax.nn.silu(linear(x, params["w_gate"])) * linear(x, params["w_up"]), params["w_down"])

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts block (DeepSeek-V2 style: shared + routed top-k).
+
+Dispatch is capacity-based scatter/gather — TPU-native dense buffers,
+no ragged shapes:
+
+  1. router softmax over E experts, top-k per token;
+  2. token t's j-th choice goes to slot `cumsum(one_hot)` within its expert
+     buffer; overflow beyond capacity C is dropped (weights renormalised);
+  3. scatter tokens into [E, C, d], run the expert FFN as a batched einsum
+     (experts shard over the `model` mesh axis => expert parallelism; the
+     scatter/gather lower to all-to-all style collectives under GSPMD);
+  4. gather back and combine with routing weights; shared experts run
+     densely on every token.
+
+Aux losses: switch-style load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, e, ffe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e), dtype, fan_in=d),
+        "w_gate": dense_init(ks[1], (e, d, ffe), dtype, fan_in=d),
+        "w_up": dense_init(ks[2], (e, d, ffe), dtype, fan_in=d),
+        "w_down": dense_init(ks[3], (e, ffe, d), dtype, fan_in=ffe),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * ffe
+        sk = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": dense_init(sk[0], (d, sff), dtype),
+            "w_up": dense_init(sk[1], (d, sff), dtype),
+            "w_down": dense_init(sk[2], (sff, d), dtype),
+        }
+    return params
+
+
+def moe_apply(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    xf = x.reshape(t, d)
+
+    logits = linear(xf, params["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)  # [T, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(t * k * cfg.capacity_factor / e))
+
+    # slot of each (token, choice) within its expert buffer
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)        # [T, K, E]
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=0) - flat_oh      # [T*K, E]
+    slot = jnp.sum(pos_in_expert * flat_oh, axis=-1)           # [T*K]
+    expert_of = top_i.reshape(t * k)
+    keep = slot < capacity
+    dest = expert_of * capacity + jnp.minimum(slot, capacity - 1)
+
+    tok_of = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * capacity, d), xf.dtype)
+    contrib = jnp.where(keep[:, None], xf[tok_of], 0.0)
+    buf = buf.at[dest].add(contrib)
+    buf = buf.reshape(e, capacity, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(e * capacity, d)
+
+    gathered = out_buf[dest]                                  # [T*K, d]
+    weight = jnp.where(keep, top_p.reshape(t * k), 0.0)
+    y = jnp.zeros((t, d), xf.dtype).at[tok_of].add(
+        gathered * weight[:, None].astype(xf.dtype)
+    )
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        y = y + linear(
+            jax.nn.silu(linear(xf, sp["w_gate"])) * linear(xf, sp["w_up"]),
+            sp["w_down"],
+        )
+
+    # ---- aux losses (computed in f32) ----
+    me = probs.mean(axis=0)                                   # mean router prob
+    ce = (onehot.sum(axis=1) > 0).astype(jnp.float32).mean(axis=0)  # routed frac
+    lb_loss = e * jnp.sum(me * ce) * cfg.router_aux_coef
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_coef
+    return y.reshape(b, s, d), lb_loss + z_loss

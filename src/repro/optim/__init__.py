@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    apply_updates,
+)

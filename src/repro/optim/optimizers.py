@@ -1,0 +1,77 @@
+"""Minimal pure-JAX optimizers (no optax available offline).
+
+PaME itself needs none (its update is a sigma-scheduled gradient step), but
+the baselines and the standard (non-DFL) training mode of the launcher do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[object], object]
+    update: Callable[[object, object, object], Tuple[object, object]]
+    # update(grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params: object, updates: object) -> object:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    return Optimizer(
+        init=lambda params: (),
+        update=lambda g, s, p: (jax.tree_util.tree_map(lambda x: -lr * x, g), s),
+    )
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        new_m = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> Optimizer:
+    class AdamState(NamedTuple):
+        mu: object
+        nu: object
+        count: jax.Array
+
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params
+        )
+        return AdamState(z(), z(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, AdamState(mu, nu, count)
+
+    return Optimizer(init, update)

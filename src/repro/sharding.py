@@ -1,0 +1,229 @@
+"""Partition-spec rules for every parameter / cache / batch leaf.
+
+Rules are keyed on leaf path names and give the *trailing* dims' axes;
+extra leading dims (layer-scan axis, DFL node axis) are padded with None
+and the node axis (training) gets "node".  Every proposed axis is dropped
+if it does not divide the corresponding dim — so the same rules serve all
+10 archs (e.g. kv=8 heads cannot shard over model=16 and fall back to the
+head_dim).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_spec",
+    "params_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "state_shardings",
+    "fit_spec",
+]
+
+# trailing-dims rules: substring of the leaf path -> tuple of axis names
+# (a tuple entry may itself list fallbacks tried in order)
+_RULES: Tuple[Tuple[str, Tuple[object, ...]], ...] = (
+    ("embed", ("model", "fsdp")),
+    ("lm_head", ("fsdp", "model")),
+    ("vision_proj", (None, "fsdp")),
+    # attention
+    ("attn/wq", ("fsdp", "model")),
+    ("attn/wk", ("fsdp", "model")),
+    ("attn/wv", ("fsdp", "model")),
+    ("attn/wo", ("model", "fsdp")),
+    ("attn/w_dq", ("fsdp", None)),
+    ("attn/w_uq", ("fsdp", "model")),
+    ("attn/w_dkv", ("fsdp", None)),
+    ("attn/w_uk", (None, "model")),
+    ("attn/w_uv", (None, "model")),
+    # dense mlp & shared experts
+    ("mlp/w_gate", ("fsdp", "model")),
+    ("mlp/w_up", ("fsdp", "model")),
+    ("mlp/w_down", ("model", "fsdp")),
+    ("shared/w_gate", ("fsdp", "model")),
+    ("shared/w_up", ("fsdp", "model")),
+    ("shared/w_down", ("model", "fsdp")),
+    # routed experts: expert-parallel over `model`
+    ("moe/router", ("fsdp", None)),
+    ("moe/w_gate", ("model", "fsdp", None)),
+    ("moe/w_up", ("model", "fsdp", None)),
+    ("moe/w_down", ("model", None, "fsdp")),
+    # mamba (fused in_proj baseline; split-proj leaves shard head-aligned)
+    ("mamba/in_proj", ("fsdp", "model")),
+    ("mamba/in_z", ("fsdp", "model")),
+    ("mamba/in_x", ("fsdp", "model")),
+    ("mamba/in_B", ("fsdp", None)),
+    ("mamba/in_C", ("fsdp", None)),
+    ("mamba/in_dt", ("fsdp", "model")),
+    ("mamba/out_proj", ("model", "fsdp")),
+    ("mamba/conv_x_w", (None, "model")),
+    ("mamba/conv_x_b", ("model",)),
+    ("mamba/conv_B_w", (None, None)),
+    ("mamba/conv_C_w", (None, None)),
+    ("mamba/conv_w", (None, "model")),
+    ("mamba/conv_b", ("model",)),
+)
+
+
+def fit_spec(axes: Tuple[object, ...], shape: Tuple[int, ...], mesh: Mesh):
+    """Drop axes that don't divide their dim; pad/truncate to rank."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    rank = len(shape)
+    padded = (None,) * (rank - len(axes)) + tuple(axes)
+    for dim, ax in zip(shape, padded[:rank]):
+        if ax is None:
+            out.append(None)
+            continue
+        candidates = ax if isinstance(ax, (list, tuple)) else (ax,)
+        chosen = None
+        for c in candidates:
+            if c in sizes and dim % sizes[c] == 0 and sizes[c] > 1:
+                chosen = c
+                break
+        out.append(chosen)
+    # an axis may appear only once in a spec
+    seen = set()
+    for i, ax in enumerate(out):
+        if ax is None:
+            continue
+        if ax in seen:
+            out[i] = None
+        else:
+            seen.add(ax)
+    return P(*out)
+
+
+# experiment hook: {"pattern": axes} entries that take precedence over
+# _RULES (set by the dry-run --variant machinery; empty in production)
+RULE_OVERRIDES: dict = {}
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh, node_stacked: bool):
+    rule: Tuple[object, ...] = ()
+    for pattern, axes in RULE_OVERRIDES.items():
+        if pattern in path:
+            rule = axes
+            break
+    else:
+        for pattern, axes in _RULES:
+            if pattern in path:
+                rule = axes
+                break
+    spec = list(fit_spec(rule, shape, mesh))
+    if node_stacked and len(spec) >= 1:
+        if "node" in mesh.axis_names and shape[0] % dict(
+            zip(mesh.axis_names, mesh.devices.shape)
+        )["node"] == 0:
+            spec[0] = "node"
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is None:
+            key = getattr(p, "idx", None)
+        if key is None:
+            key = str(p)
+        parts.append(str(key))
+    return "/".join(parts)
+
+
+def params_shardings(params_shapes, mesh: Mesh, node_stacked: bool):
+    """ShapeDtypeStruct tree -> NamedSharding tree."""
+
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, node_stacked)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, node_stacked: bool):
+    """tokens [m,b,s] -> (node, fsdp, None); serving [b, s] -> ((node,fsdp), ...)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if node_stacked:
+            axes: list = [None] * len(shape)
+            if shape and shape[0] % sizes["node"] == 0:
+                axes[0] = "node"
+            if len(shape) > 1 and shape[1] % sizes["fsdp"] == 0 and sizes["fsdp"] > 1:
+                axes[1] = "fsdp"
+            return NamedSharding(mesh, P(*axes))
+        # serving: batch over (node, fsdp) jointly if divisible
+        axes = [None] * len(shape)
+        if shape:
+            nf = sizes["node"] * sizes["fsdp"]
+            if shape[0] % nf == 0:
+                axes[0] = ("node", "fsdp") if sizes["fsdp"] > 1 else "node"
+            elif shape[0] % sizes["node"] == 0:
+                axes[0] = "node"
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    """KV/MLA/SSM cache trees: batch over (node, fsdp); heads over model."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nf = sizes["node"] * sizes["fsdp"]
+
+    def batch_axis(b: int):
+        if b % nf == 0:
+            return ("node", "fsdp") if sizes["fsdp"] > 1 else "node"
+        if b % sizes["node"] == 0:
+            return "node"
+        return None
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        # leading dim of every cache leaf (after the layer-stack axis) is batch;
+        # stacked caches have [L, B, ...]
+        axes: list = [None] * len(shape)
+        name = p.rsplit("/", 1)[-1]
+        if name == "positions":
+            return NamedSharding(mesh, P(*axes))
+        # find batch position: stacked caches are [L, B, ...]
+        bpos = 1 if len(shape) >= 2 else 0
+        axes[bpos] = batch_axis(shape[bpos])
+        if name in ("k", "v") and len(shape) >= 4:
+            # [L, B, C, KV, hd]
+            kv, hd = shape[-2], shape[-1]
+            if kv % sizes["model"] == 0:
+                axes[-2] = "model"
+            elif hd % sizes["model"] == 0:
+                axes[-1] = "model"
+        if name == "state" and len(shape) >= 4:
+            # [L, B, H, P, N]
+            if shape[2] % sizes["model"] == 0:
+                axes[2] = "model"
+        if name == "conv" and len(shape) >= 3:
+            if shape[-1] % sizes["model"] == 0:
+                axes[-1] = "model"
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def state_shardings(state_shapes, mesh: Mesh):
+    """PaMEState: params node-stacked; sigma [m] over node; step/key replicated."""
+    params_sh = params_shardings(state_shapes.params, mesh, node_stacked=True)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sigma_spec = (
+        P("node") if state_shapes.sigma.shape[0] % sizes["node"] == 0 else P(None)
+    )
+    return type(state_shapes)(
+        params=params_sh,
+        sigma=NamedSharding(mesh, sigma_spec),
+        step=NamedSharding(mesh, P()),
+        key=NamedSharding(mesh, P()),
+    )

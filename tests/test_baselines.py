@@ -1,0 +1,86 @@
+"""The comparison algorithms all make progress on a well-conditioned task."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.compression import identity, one_bit, qsgd, rand_k, top_k
+from repro.core.topology import build_topology
+
+
+@pytest.fixture(scope="module")
+def problem():
+    m, n, spn = 8, 30, 32
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=1)
+    bmat = jnp.asarray(topo.mixing)
+    rng = np.random.default_rng(0)
+    w_star = rng.standard_normal(n)
+    a = rng.standard_normal((m, spn, n))
+    y = a @ w_star + 0.1 * rng.standard_normal((m, spn))
+    a_j, y_j = jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32)
+
+    def grad_fn(w, batch, key):
+        aa, yy = batch
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    batch = (a_j, y_j)
+    w0 = B.stack_params(jnp.zeros(n), m)
+    return bmat, grad_fn, batch, w0
+
+
+def _run(step_fn, state, batch, steps=250):
+    _, hist = B.run_algorithm(step_fn, state, lambda k: batch, steps, tol_std=0.0)
+    return hist["loss"]
+
+
+def test_dpsgd(problem):
+    bmat, grad_fn, batch, w0 = problem
+    st = B.dpsgd_init(jax.random.PRNGKey(0), w0)
+    loss = _run(lambda s, b: B.dpsgd_step(s, b, grad_fn, bmat, 0.05), st, batch)
+    assert loss[-1] < 0.05 * loss[0]
+
+
+def test_dfedsam(problem):
+    bmat, grad_fn, batch, w0 = problem
+    st = B.dfedsam_init(jax.random.PRNGKey(0), w0)
+    loss = _run(
+        lambda s, b: B.dfedsam_step(s, b, grad_fn, bmat, 0.05, rho=0.01), st, batch
+    )
+    assert loss[-1] < 0.05 * loss[0]
+
+
+def test_choco_contractive(problem):
+    bmat, grad_fn, batch, w0 = problem
+    st = B.choco_init(jax.random.PRNGKey(0), w0)
+    comp = rand_k(0.3, rescale=False)
+    loss = _run(
+        lambda s, b: B.choco_step(s, b, grad_fn, bmat, 0.05, comp, 0.3),
+        st, batch, steps=400,
+    )
+    assert loss[-1] < 0.05 * loss[0]
+
+
+def test_beer(problem):
+    bmat, grad_fn, batch, w0 = problem
+    st = B.beer_init(jax.random.PRNGKey(0), w0, batch, grad_fn)
+    comp = rand_k(0.3, rescale=False)
+    loss = _run(
+        lambda s, b: B.beer_step(s, b, grad_fn, bmat, 0.02, comp, 0.3),
+        st, batch, steps=400,
+    )
+    assert loss[-1] < 0.05 * loss[0]
+
+
+def test_nids_and_anq(problem):
+    bmat, grad_fn, batch, w0 = problem
+    st = B.nids_init(jax.random.PRNGKey(0), w0, batch, grad_fn, 0.05)
+    loss = _run(lambda s, b: B.nids_step(s, b, grad_fn, bmat, 0.05), st, batch)
+    assert loss[-1] < 0.05 * loss[0]
+    st = B.nids_init(jax.random.PRNGKey(0), w0, batch, grad_fn, 0.05)
+    loss_q = _run(
+        lambda s, b: B.nids_step(s, b, grad_fn, bmat, 0.05, qsgd(64)),
+        st, batch, steps=400,
+    )
+    assert loss_q[-1] < 0.1 * loss_q[0]

@@ -1,0 +1,67 @@
+"""Compression operator invariants (hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import one_bit, qsgd, rand_k, top_k
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 128), seed=st.integers(0, 1000))
+def test_rand_k_unbiased(n, seed):
+    """E C(x) = x within ~6 standard errors per coordinate."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(rng.standard_normal(n), np.float32)
+    comp = rand_k(0.25, rescale=True)
+    acc = np.zeros(n)
+    trials = 600
+    for t in range(trials):
+        acc += np.asarray(comp.apply(jax.random.PRNGKey(t), x))
+    est = acc / trials
+    s = max(1, round(0.25 * n))
+    stderr = np.abs(x) * np.sqrt((n / s - 1) / trials)
+    assert (np.abs(est - x) <= 6 * stderr + 0.02).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 200), seed=st.integers(0, 1000), frac=st.sampled_from([0.1, 0.3, 0.5]))
+def test_rand_k_contractive(n, seed, frac):
+    """||C(x) - x||^2 <= (1 - s/n) ||x||^2 in expectation (holds a.s. here)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = rand_k(frac, rescale=False)
+    y = comp.apply(jax.random.PRNGKey(seed), x)
+    err = float(jnp.sum((y - x) ** 2))
+    assert err <= float(jnp.sum(x**2)) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 100), seed=st.integers(0, 1000))
+def test_top_k_keeps_largest(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = top_k(0.25)
+    y = np.asarray(comp.apply(jax.random.PRNGKey(0), x))
+    s = max(1, round(0.25 * n))
+    kept = np.nonzero(y)[0]
+    assert len(kept) <= s + 1
+    thr = np.sort(np.abs(np.asarray(x)))[-s]
+    assert (np.abs(np.asarray(x)[kept]) >= thr - 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 100), seed=st.integers(0, 1000))
+def test_qsgd_bounded_error(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    comp = qsgd(16)
+    y = comp.apply(jax.random.PRNGKey(seed), x)
+    norm = float(jnp.linalg.norm(x))
+    assert float(jnp.max(jnp.abs(y - x))) <= norm / 16 + 1e-5
+
+
+def test_bit_accounting_ordering():
+    n = 10_000
+    assert rand_k(0.1).bits(n) < rand_k(0.5).bits(n) < 64 * n
+    assert one_bit().bits(n) < qsgd(16).bits(n) < 64 * n

@@ -1,0 +1,87 @@
+"""Data pipeline: synthetic generators, partitioners, per-node batcher."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    NodeBatcher,
+    SyntheticClassification,
+    SyntheticTokens,
+    dirichlet_partition,
+    iid_partition,
+    label_skew_partition,
+)
+from repro.data.synthetic import make_linear_regression, make_logistic_regression
+
+
+def test_linear_regression_matches_paper_spec():
+    a, b, w_star = make_linear_regression(8, 32, 200, seed=0)
+    nnz = np.nonzero(w_star)[0]
+    assert len(nnz) == 2  # 1% of 200
+    assert ((0.5 <= np.abs(w_star[nnz])) & (np.abs(w_star[nnz]) <= 2.0)).all()
+    assert a.shape == (8, 32, 200) and b.shape == (8, 32)
+
+
+def test_logistic_regression_labels_binary():
+    a, b, w_star = make_logistic_regression(4, 16, 50, seed=1)
+    assert set(np.unique(b)) <= {0.0, 1.0}
+    assert np.count_nonzero(w_star) == 25
+
+
+def test_iid_partition_covers_everything():
+    labels = np.random.default_rng(0).integers(0, 10, 333)
+    parts = iid_partition(labels, 7)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 333 and len(np.unique(allidx)) == 333
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.sampled_from([1, 3, 7, 10]), m=st.sampled_from([4, 8, 10]))
+def test_label_skew_class_budget(c, m):
+    ds = SyntheticClassification.make(600, (4, 4, 1), 10, seed=0)
+    parts = label_skew_partition(ds.labels, m, c, seed=0)
+    for p in parts:
+        assert len(np.unique(ds.labels[p])) <= c
+    # no index assigned twice
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == len(np.unique(allidx))
+
+
+def test_dirichlet_partition_heterogeneity_ordering():
+    """Lower beta => more skewed class distributions (on average)."""
+    ds = SyntheticClassification.make(4000, (2, 2, 1), 10, seed=0)
+
+    def mean_entropy(beta):
+        parts = dirichlet_partition(ds.labels, 8, beta, seed=0)
+        ents = []
+        for p in parts:
+            hist = np.bincount(ds.labels[p], minlength=10).astype(float)
+            q = hist / hist.sum()
+            q = q[q > 0]
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert mean_entropy(0.1) < mean_entropy(10.0)
+
+
+def test_node_batcher_epochs_and_shapes():
+    ds = SyntheticClassification.make(64, (4, 4, 1), 10, seed=0)
+    parts = iid_partition(ds.labels, 4, seed=0)
+    nb = NodeBatcher({"x": ds.images, "y": ds.labels}, parts, batch_size=8, seed=0)
+    seen = [set() for _ in range(4)]
+    for _ in range(2):  # exactly one epoch per node (16 samples / 8 batch)
+        b = nb.next()
+        assert b["x"].shape == (4, 8, 4, 4, 1)
+        for i in range(4):
+            seen[i] |= set(b["y"][i].tolist())
+    # after one epoch every node has cycled its own shard
+    for i in range(4):
+        assert seen[i] == set(ds.labels[parts[i]].tolist())
+
+
+def test_synthetic_tokens_heterogeneous():
+    corpus = SyntheticTokens.make(4, 2048, 1000, seed=0)
+    supports = [set(np.unique(corpus.tokens[i])) for i in range(4)]
+    # Dirichlet unigram draws: different nodes see mostly different tokens
+    inter = supports[0] & supports[1]
+    assert len(inter) < 0.8 * min(len(supports[0]), len(supports[1]))

@@ -1,0 +1,134 @@
+"""PaME (Algorithm 1): convergence, consensus, boundedness, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PaMEConfig, build_topology, run_pame
+from repro.core.pame import make_topology_arrays, pame_init, pame_step
+
+
+def _linreg_problem(m=12, n=40, spn=64, noise=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    w_star = np.zeros(n)
+    idx = rng.choice(n, 3, replace=False)
+    w_star[idx] = rng.uniform(0.5, 2, 3) * rng.choice([-1, 1], 3)
+    a = rng.standard_normal((m, spn, n))
+    b = a @ w_star + noise * rng.standard_normal((m, spn))
+    a_j, b_j = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    def grad_fn(w, batch, key):
+        aa, yy = batch
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    def objective(w):
+        r = jnp.einsum("mbn,n->mb", a_j, w) - b_j
+        return jnp.sum(0.5 * jnp.mean(r**2, axis=1))
+
+    noise_floor = m * 0.5 * noise**2
+    return (a_j, b_j), grad_fn, objective, noise_floor
+
+
+def test_pame_converges_linear_regression():
+    m = 12
+    batch, grad_fn, objective, floor = _linreg_problem(m=m)
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0)
+    _, hist = run_pame(
+        jax.random.PRNGKey(0), jnp.zeros(40), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=500, objective_fn=objective, tol_std=0.0,
+    )
+    obj = np.asarray(hist["objective"])
+    assert obj[-1] < obj[0] * 0.15
+    assert obj[-1] < floor * 1.5  # reaches the stochastic floor
+    # consensus error decays
+    assert hist["consensus"][-1] < hist["consensus"][10] * 0.5
+
+
+def test_pame_linear_rate_typeII():
+    """Thm 4: f(w^k) - f_inf = O(gamma^{-k/2}) — fit log-gap slope and
+    check it's negative & roughly linear (deterministic full batch)."""
+    m = 8
+    batch, grad_fn, objective, _ = _linreg_problem(m=m, noise=0.0)
+    topo = build_topology("complete", m)
+    cfg = PaMEConfig(nu=0.9, p=0.8, gamma=1.02, sigma0=8.0, homogeneous_kappa=1)
+    _, hist = run_pame(
+        jax.random.PRNGKey(0), jnp.zeros(40), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=400, objective_fn=objective, tol_std=0.0,
+    )
+    obj = np.asarray(hist["objective"])
+    f_inf = obj[-1]
+    gap = obj[:200] - f_inf
+    gap = np.maximum(gap, 1e-12)
+    k = np.arange(len(gap))
+    slope = np.polyfit(k, np.log(gap), 1)[0]
+    assert slope < -0.01  # geometric decay
+    # check the fit is decent (log-linear): R^2 > 0.8
+    pred = np.polyval(np.polyfit(k, np.log(gap), 1), k)
+    ss_res = np.sum((np.log(gap) - pred) ** 2)
+    ss_tot = np.sum((np.log(gap) - np.log(gap).mean()) ** 2)
+    assert 1 - ss_res / ss_tot > 0.8
+
+
+def test_pame_iterates_bounded_lemma3():
+    """Iterates stay in a bounded region (Lemma 3 / Thm 2.1)."""
+    m = 8
+    batch, grad_fn, objective, _ = _linreg_problem(m=m)
+    topo = build_topology("ring", m)
+    cfg = PaMEConfig(nu=0.9, p=0.3, gamma=1.01, sigma0=8.0)
+    state, hist = run_pame(
+        jax.random.PRNGKey(1), jnp.zeros(40), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=300, objective_fn=objective, tol_std=0.0,
+    )
+    w = np.asarray(state.params)
+    assert np.isfinite(w).all()
+    assert np.abs(w).max() < 10.0
+
+
+def test_sigma_growth_and_comm_schedule():
+    m = 6
+    topo = build_topology("complete", m)
+    cfg = PaMEConfig(nu=0.5, p=0.5, gamma=1.1, sigma0=2.0, homogeneous_kappa=3)
+    arrs = make_topology_arrays(topo, cfg)
+    params = {"w": jnp.zeros((m, 4))}
+
+    def grad_fn(p, b, k):
+        return jnp.sum(p["w"] ** 2), jax.tree_util.tree_map(lambda x: 2 * x, p)
+
+    state = pame_init(jax.random.PRNGKey(0), params, m, cfg)
+    batch = {"w": jnp.zeros((m, 4))}
+    comm_counts = []
+    for k in range(7):
+        state, metrics = pame_step(state, batch, grad_fn, arrs, cfg)
+        comm_counts.append(int(metrics["comm_nodes"]))
+    # homogeneous kappa=3: all m communicate at k = 0, 3, 6
+    assert comm_counts[0] == m and comm_counts[3] == m and comm_counts[6] == m
+    assert comm_counts[1] == 0 and comm_counts[2] == 0
+    np.testing.assert_allclose(
+        float(state.sigma[0]), 2.0 * 1.1**7, rtol=1e-5
+    )
+
+
+def test_pame_heterogeneous_kappas_still_converge():
+    m = 10
+    batch, grad_fn, objective, floor = _linreg_problem(m=m)
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=2)
+    cfg = PaMEConfig(nu=0.3, p=0.2, gamma=1.01, sigma0=8.0, kappa_lo=3, kappa_hi=7)
+    _, hist = run_pame(
+        jax.random.PRNGKey(0), jnp.zeros(40), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=500, objective_fn=objective, tol_std=0.0,
+    )
+    assert hist["objective"][-1] < hist["objective"][0] * 0.2
+
+
+def test_paper_termination_rule():
+    m = 8
+    batch, grad_fn, objective, _ = _linreg_problem(m=m)
+    topo = build_topology("complete", m)
+    cfg = PaMEConfig(nu=0.5, p=0.5, gamma=1.05, sigma0=8.0)
+    _, hist = run_pame(
+        jax.random.PRNGKey(0), jnp.zeros(40), m, grad_fn, lambda k: batch,
+        topo, cfg, num_steps=2000, objective_fn=objective, tol_std=1e-3,
+    )
+    assert hist["steps_run"] < 2000  # terminated early by the std rule

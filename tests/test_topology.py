@@ -1,0 +1,68 @@
+"""Topology substrate: connectivity, doubly-stochastic mixing, spectral gap."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    build_topology,
+    complete_graph,
+    grid_graph,
+    metropolis_matrix,
+    ring_graph,
+    spectral_gap_zeta,
+    star_graph,
+)
+
+KINDS = ["ring", "grid", "complete", "star", "erdos_renyi", "regular"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_doubly_stochastic_and_gap(kind):
+    topo = build_topology(kind, 12, p=0.5, degree=4, seed=3)
+    b = topo.mixing
+    assert np.allclose(b.sum(axis=0), 1.0, atol=1e-9)
+    assert np.allclose(b.sum(axis=1), 1.0, atol=1e-9)
+    assert np.allclose(b, b.T)
+    assert (b >= -1e-12).all()
+    # Assumption 1: zeta < 1 iff connected (all our builders guarantee it)
+    assert 0.0 <= topo.zeta < 1.0
+
+
+def test_neighbor_sets_match_adjacency():
+    topo = build_topology("erdos_renyi", 10, p=0.6, seed=1)
+    for i, ns in enumerate(topo.neighbor_sets):
+        assert i not in ns
+        for j in ns:
+            assert topo.adjacency[i, j] == 1
+            assert i in topo.neighbor_sets[j]  # undirected
+
+
+def test_padded_neighbor_matrix():
+    topo = build_topology("star", 7)
+    nbrs, valid = topo.neighbor_matrix_padded()
+    assert nbrs.shape == valid.shape == (7, topo.max_degree)
+    assert valid[0].sum() == 6  # hub sees all
+    assert all(valid[i].sum() == 1 for i in range(1, 7))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 24))
+def test_ring_spectral_gap_worse_than_complete(m):
+    ring = metropolis_matrix(ring_graph(m))
+    comp = metropolis_matrix(complete_graph(m))
+    assert spectral_gap_zeta(comp) <= spectral_gap_zeta(ring) + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 30))
+def test_metropolis_always_doubly_stochastic(m):
+    for builder in (ring_graph, grid_graph, star_graph):
+        b = metropolis_matrix(builder(m))
+        assert np.allclose(b.sum(axis=0), 1.0)
+        assert np.allclose(b.sum(axis=1), 1.0)
+        assert (b >= -1e-12).all()
+
+
+def test_disconnected_rejected():
+    with pytest.raises((ValueError, RuntimeError)):
+        build_topology("erdos_renyi", 10, p=0.0)
