@@ -66,6 +66,15 @@ def pame_bits_per_round(
     return m * mean_t * message_bits(s, n, value_bits)
 
 
+def chunk_for(steps: int) -> int:
+    """A scan-chunk length dividing `steps`, so a timed run reuses the single
+    warmed-up executable (no tail-chunk compile in the measured region)."""
+    for c in (50, 40, 32, 25, 20):
+        if steps % c == 0:
+            return c
+    return min(32, steps)
+
+
 def timed(fn: Callable, *args, repeats: int = 3) -> float:
     """us per call (post-jit)."""
     out = fn(*args)

@@ -18,6 +18,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.compression import Compressor, identity
 
 GradFn = Callable[[object, object, jax.Array], Tuple[jax.Array, object]]
@@ -334,7 +335,27 @@ def run_algorithm(
     objective_fn: Optional[Callable[[object], jax.Array]] = None,
     params_of=lambda s: s.params,
     tol_std: float = 1e-3,
+    driver: str = "scan",
+    chunk_size: int = engine.DEFAULT_CHUNK_SIZE,
 ) -> Tuple[object, dict]:
+    """Race driver shared by every baseline.
+
+    driver="scan" (default) uses the fused chunked-`lax.scan` engine
+    (`repro.core.engine`): one dispatch per `chunk_size` steps, donated
+    state, a single bulk metric readback, and the std termination rule
+    evaluated on-device.  driver="host" is the original per-step loop.
+    """
+    if driver == "scan":
+        state, metrics, info = engine.run_scan_loop(
+            step_fn, state, batch_fn, num_steps,
+            objective_fn=objective_fn, params_of=params_of,
+            tol_std=tol_std, chunk_size=chunk_size,
+        )
+        return state, engine.history_from(
+            metrics, info, {"loss": "loss_mean", "objective": "objective"}
+        )
+    if driver != "host":
+        raise ValueError(f"unknown driver {driver!r}")
     import numpy as np
 
     step = jax.jit(step_fn)

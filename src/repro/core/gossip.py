@@ -126,25 +126,26 @@ def _leaf_average(
 
     onehot = jax.nn.one_hot(off, kk, dtype=leaf.dtype)          # [m, kk]
     af = a.astype(leaf.dtype)
-    # per class c: receivers average the neighbors that sent class c.
-    # The tiny Python loop over k classes keeps every einsum a plain
-    # [m, m] x [m, n/k] contraction (no [m, k, m, ...] intermediates).
-    per_class = []
-    for c in range(kk):
-        w_c = af * onehot[:, c][:, None]                        # [m(j), m(i)]
-        agg_c = jnp.einsum(
-            "j...,ji->i...", payload, w_c,
-            preferred_element_type=jnp.float32,
-        )                                                        # [m, b1, *rest]
-        cnt_c = jnp.sum(w_c, axis=0).astype(jnp.float32)         # [m]
-        cnt_b = cnt_c.reshape((m, 1) + (1,) * len(rest))
-        avg_c = jnp.where(
-            cnt_b > 0,
-            (agg_c / jnp.maximum(cnt_b, 1.0)).astype(leaf.dtype),
-            classes[:, c],
-        )
-        per_class.append(avg_c)
-    out = jnp.stack(per_class, axis=1).reshape((m, d1 + pad) + rest)
+    # every (receiver, class) pair at once: fold the class one-hot into the
+    # selection matrix ([m, m, kk] — tiny: nodes x nodes x classes) and run
+    # ONE batched contraction over the sender axis instead of kk separate
+    # [m, m] x [m, n/k] einsums dispatched from a Python loop.
+    sel = af[:, :, None] * onehot[:, None, :]                    # [j, i, c]
+    flat_payload = payload.reshape(m, -1)                        # [j, b1*rest]
+    agg = jnp.einsum(
+        "jb,jic->icb", flat_payload, sel,
+        preferred_element_type=jnp.float32,
+    ).reshape((m, kk, b1) + rest)                                # [i, c, b1, *rest]
+    cnt = jnp.einsum(
+        "ji,jc->ic", af, onehot, preferred_element_type=jnp.float32
+    )                                                            # [i, c]
+    cnt_b = cnt.reshape((m, kk, 1) + (1,) * len(rest))
+    avg = jnp.where(
+        cnt_b > 0,
+        (agg / jnp.maximum(cnt_b, 1.0)).astype(leaf.dtype),
+        classes,
+    )
+    out = avg.reshape((m, d1 + pad) + rest)
     if pad:
         out = out[:, :d1]
     return out

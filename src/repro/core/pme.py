@@ -35,6 +35,11 @@ __all__ = [
 ]
 
 
+# exact-mode leaves at least this large route through the fused Pallas
+# kernel (kernels.pme_average); smaller ones stay on the plain einsum.
+_KERNEL_MIN_ELEMS = 1 << 17
+
+
 def sample_coordinate_masks(
     key: jax.Array,
     m: int,
@@ -48,10 +53,15 @@ def sample_coordinate_masks(
     replacement, independently across nodes (Setup 1.3).
     """
     if mode == "exact":
+        if s >= n:  # dense exchange (s = n): every coordinate is sent
+            return jnp.ones((m, n), bool)
         u = jax.random.uniform(key, (m, n))
-        # rank of each entry within its row; keep the s smallest.
-        ranks = jnp.argsort(jnp.argsort(u, axis=1), axis=1)
-        return ranks < s
+        # keep the s smallest entries per row: one O(n log s) top_k pass on
+        # -u instead of two full argsorts (selects the same set of
+        # coordinates as the rank-based formulation for any draw of u).
+        _, idx = jax.lax.top_k(-u, s)
+        rows = jnp.arange(m)[:, None]
+        return jnp.zeros((m, n), bool).at[rows, idx].set(True)
     elif mode == "bernoulli":
         p = s / n
         return jax.random.bernoulli(key, p, (m, n))
@@ -76,8 +86,14 @@ def sample_neighbor_selection(
     m, d = nbrs.shape
     u = jax.random.uniform(key, (m, d))
     u = jnp.where(valid, u, jnp.inf)  # never pick padding
-    ranks = jnp.argsort(jnp.argsort(u, axis=1), axis=1)
-    sel = (ranks < t[:, None]) & valid  # [m, d] — receiver i picks these
+    # receiver i keeps its t_i smallest draws: a single top_k pass over the
+    # (small) padded-degree axis, then scatter "position < t_i" back through
+    # the sort order — picks the same neighbors as the double-argsort rank
+    # formulation without materialising two full sorts.
+    _, order = jax.lax.top_k(-u, d)  # ascending u per row
+    take = jnp.arange(d)[None, :] < t[:, None]
+    sel = jnp.zeros((m, d), bool).at[jnp.arange(m)[:, None], order].set(take)
+    sel = sel & valid  # [m, d] — receiver i picks these
     # scatter into dense A: receiver on columns.
     onehot = jax.nn.one_hot(nbrs, m, dtype=jnp.float32)  # [m, d, m] sender id
     a_rows_by_receiver = jnp.einsum(
@@ -140,7 +156,20 @@ def pme_average_pytree(
             n = flat.shape[1]
             s = max(1, int(round(p * n)))
             masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
-            out.append(pme_average(flat, masks, a).reshape(leaf.shape))
+            if flat.size >= _KERNEL_MIN_ELEMS and jax.default_backend() != "cpu":
+                # hot path: fused Pallas kernel (1 HBM read + 1 write of the
+                # [m, n] operand).  Tiny leaves stay on the einsum path —
+                # kernel launch overhead dominates — and CPU always does:
+                # there the kernel only exists in (much slower) interpret
+                # mode, kept for correctness tests, not for this route.
+                from repro.kernels.pme_average.ops import (
+                    pme_average as pme_average_fused,
+                )
+
+                avg = pme_average_fused(flat, masks, a)
+            else:
+                avg = pme_average(flat, masks, a)
+            out.append(avg.reshape(leaf.shape))
         else:
             # No reshape: keep the leaf's trailing structure (and thus its
             # tensor sharding) intact; only the node axis is contracted.
@@ -165,5 +194,12 @@ def pme_average_pytree(
 
 def message_bits(s: int, n: int, value_bits: int = 64) -> int:
     """Eq. (8): transmitting a sparse vector costs (value_bits-1)*s + n bits
-    (s payload values + an n-bit occupancy pattern); 64-bit gives 63s + n."""
+    (s payload values + an n-bit occupancy pattern); 64-bit gives 63s + n.
+
+    value_bits=8 is the int8 wire format of exchange="compressed_q8": full
+    8-bit payload values (no sign-bit folding), the n-bit occupancy pattern,
+    plus one f32 absmax scale per message for dequantisation.
+    """
+    if value_bits == 8:
+        return 8 * s + n + 32
     return (value_bits - 1) * s + n

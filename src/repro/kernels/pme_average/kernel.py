@@ -1,13 +1,16 @@
 """Fused PME count-weighted average — Pallas TPU kernel.
 
-For a coordinate tile of width BN:
+For a (receiver, coordinate) tile of shape [BM, BN]:
     agg[i, l] = sum_j A[j, i] * M[j, l] * W[j, l]     (MXU matmul)
     cnt[i, l] = sum_j A[j, i] * M[j, l]               (MXU matmul)
     out[i, l] = cnt > 0 ? agg / cnt : W[i, l]         (VPU select)
 
-W/M tiles stream HBM->VMEM along the coordinate axis; the selection matrix
-A^T (m x m, m = #nodes <= a few hundred) stays resident in VMEM across the
-whole grid.  The fusion avoids materialising the masked copy of W and the
+The grid covers both the coordinate axis (tiles of BN) and the receiver
+node axis (tiles of BM), so neither m nor n has to fit a single tile: W/M
+tiles stream HBM->VMEM along the coordinate axis with the full sender axis
+resident for the contraction, while each grid row only holds its [BM, m]
+slice of the selection matrix A^T and the matching [BM, BN] self-fallback
+tile of W.  The fusion avoids materialising the masked copy of W and the
 count tensor in HBM — on a v5e this takes the op from 4 HBM round trips of
 the [m, n] operand down to 1 read + 1 write.
 """
@@ -20,48 +23,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_M = 128
 
 
-def _kernel(at_ref, w_ref, m_ref, out_ref):
+def _kernel(at_ref, w_ref, m_ref, wself_ref, out_ref):
     # f32 compute: exact counts, and the CPU interpreter lacks bf16 dots;
     # on TPU the converts fuse into the MXU matmul.
-    a_t = at_ref[...].astype(jnp.float32)   # [m, m]  A^T, receiver-major
-    w = w_ref[...]                          # [m, BN]
-    mask = m_ref[...].astype(jnp.float32)   # [m, BN] (0/1)
-    wf = w.astype(jnp.float32)
-    wm = wf * mask
+    a_t = at_ref[...].astype(jnp.float32)       # [BM, m]  A^T rows, receiver-major
+    w = w_ref[...]                              # [m, BN]  full sender axis
+    mask = m_ref[...].astype(jnp.float32)       # [m, BN] (0/1)
+    w_self = wself_ref[...].astype(jnp.float32)  # [BM, BN] receivers' own coords
+    wm = w.astype(jnp.float32) * mask
     agg = jnp.dot(a_t, wm, preferred_element_type=jnp.float32)
     cnt = jnp.dot(a_t, mask, preferred_element_type=jnp.float32)
-    out = jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), wf)
+    out = jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), w_self)
     out_ref[...] = out.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
 def pme_average_pallas(
     w: jax.Array,      # [m, n]
     masks: jax.Array,  # [m, n] same dtype as w (0/1)
     a: jax.Array,      # [m, m] selection, A[j, i] = j in N_i^k
     block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
     interpret: bool = False,
 ) -> jax.Array:
     m, n = w.shape
     bn = min(block_n, n)
-    pad = (-n) % bn
-    if pad:
-        w = jnp.pad(w, ((0, 0), (0, pad)))
-        masks = jnp.pad(masks, ((0, 0), (0, pad)))
-    grid = ((n + pad) // bn,)
-    a_t = a.T.astype(w.dtype)
+    bm = min(block_m, m)
+    pad_n = (-n) % bn
+    pad_m = (-m) % bm
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+        masks = jnp.pad(masks, ((0, 0), (0, pad_n)))
+    a_t = a.T.astype(w.dtype)  # [receiver, sender]
+    w_self = w
+    if pad_m:
+        # pad receiver rows only; the sender (contraction) axis stays m, so
+        # padded rows see cnt == 0 and fall back to their (zero) w_self.
+        a_t = jnp.pad(a_t, ((0, pad_m), (0, 0)))
+        w_self = jnp.pad(w_self, ((0, pad_m), (0, 0)))
+    grid = ((m + pad_m) // bm, (n + pad_n) // bn)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((m, m), lambda j: (0, 0)),    # A^T resident
-            pl.BlockSpec((m, bn), lambda j: (0, j)),   # W tile
-            pl.BlockSpec((m, bn), lambda j: (0, j)),   # mask tile
+            pl.BlockSpec((bm, m), lambda i, j: (i, 0)),   # A^T receiver rows
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),   # W sender tile
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),   # mask sender tile
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # W self-fallback
         ],
-        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n + pad), w.dtype),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n + pad_n), w.dtype),
         interpret=interpret,
-    )(a_t, w, masks)
-    return out[:, :n] if pad else out
+    )(a_t, w, masks, w_self)
+    return out[:m, :n]

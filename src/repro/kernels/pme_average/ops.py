@@ -4,7 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pme_average.kernel import pme_average_pallas
+from repro.kernels.pme_average.kernel import (
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+    pme_average_pallas,
+)
 
 
 def _on_cpu() -> bool:
@@ -12,8 +16,14 @@ def _on_cpu() -> bool:
 
 
 def pme_average(
-    w: jax.Array, masks: jax.Array, a: jax.Array, block_n: int = 512
+    w: jax.Array,
+    masks: jax.Array,
+    a: jax.Array,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
 ) -> jax.Array:
     """Count-weighted PME average; masks may be bool or numeric."""
     masks = masks.astype(w.dtype)
-    return pme_average_pallas(w, masks, a, block_n=block_n, interpret=_on_cpu())
+    return pme_average_pallas(
+        w, masks, a, block_n=block_n, block_m=block_m, interpret=_on_cpu()
+    )

@@ -245,6 +245,8 @@ def run_combo(
     t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     colls = parse_collective_bytes(compiled.as_text())
     rec = {
         "arch": arch,

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # real pkg or the conftest stub
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compression import one_bit, qsgd, rand_k, top_k

@@ -33,6 +33,26 @@ def test_pme_average_kernel_shapes(m, n, dtype):
     )
 
 
+@pytest.mark.parametrize("m,block_m", [(16, 4), (24, 8), (7, 2), (12, 128)])
+@pytest.mark.parametrize("n,block_n", [(100, 64), (257, 64), (513, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pme_average_kernel_node_grid(m, block_m, n, block_n, dtype):
+    """Node-axis grid: m spanning multiple BM tiles (incl. non-divisible m
+    and n) must match the oracle for f32 and bf16."""
+    rng = np.random.default_rng(m * 7 + n)
+    w = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    masks = jnp.asarray(rng.random((m, n)) < 0.25)
+    a = jnp.asarray(
+        ((rng.random((m, m)) < 0.4) & ~np.eye(m, dtype=bool)).astype(np.float32)
+    )
+    out = pme_average(w, masks, a, block_n=block_n, block_m=block_m)
+    ref = pme_average_ref(w, masks.astype(w.dtype), a)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     m=st.integers(2, 10),
