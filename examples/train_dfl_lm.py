@@ -28,6 +28,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--p", type=float, default=0.2, help="transmission rate s/n")
+    ap.add_argument("--algo", default="pame",
+                    help="any registered algorithm (see repro.core.algorithms)")
     ap.add_argument("--layers", type=int, default=None, help="override depth")
     ap.add_argument("--d-model", type=int, default=None)
     args = ap.parse_args()
@@ -47,7 +49,7 @@ def main() -> None:
     from repro.launch import train as train_mod
 
     argv = [
-        "--arch", args.arch, "--variant", "smoke",
+        "--arch", args.arch, "--variant", "smoke", "--algo", args.algo,
         "--steps", str(args.steps), "--batch", str(args.batch),
         "--seq", str(args.seq), "--nodes", str(args.nodes),
         "--p", str(args.p), "--sigma0", "50", "--log-every", "10",

@@ -1,13 +1,16 @@
 """Core of the reproduction: the PaME algorithm and its substrate.
 
   topology     — communication graphs, doubly-stochastic mixing matrices
+  mixing       — gossip operators: dense einsum vs padded neighbor exchange
   pme          — Partial Message Exchange (Algorithm 2)
   pame         — the PaME step (Algorithm 1)
   baselines    — D-PSGD / DFedSAM / CHOCO-SGD / BEER / (AN)Q-NIDS
+  algorithms   — unified registry binding all of the above to one contract
   compression  — rand-k / top-k / QSGD / one-bit operators
   gossip       — mesh-sharded gossip (dense-masked + compressed payload)
 """
 from repro.core.topology import Topology, build_topology  # noqa: F401
+from repro.core.mixing import Mixer, make_mixer, mix_padded  # noqa: F401
 from repro.core.pme import (  # noqa: F401
     pme_average,
     pme_average_pytree,
@@ -23,4 +26,11 @@ from repro.core.pame import (  # noqa: F401
     pame_step,
     run_pame,
     make_topology_arrays,
+)
+from repro.core.algorithms import (  # noqa: F401
+    Algorithm,
+    BoundAlgorithm,
+    get_algorithm,
+    list_algorithms,
+    register,
 )

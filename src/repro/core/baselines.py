@@ -9,19 +9,26 @@
 All operate on node-stacked pytrees [m, ...] and a doubly-stochastic mixing
 matrix B (Assumption 1), mirroring `repro.core.pame` so the benchmark
 harness can swap algorithms behind one interface.
+
+Every step function takes the gossip operator as `b`: either a raw [m, m]
+matrix (legacy dense-einsum semantics) or a `repro.core.mixing.Mixer`,
+whose "sparse" mode contracts the node axis through the padded
+neighbor-exchange form — O(m·deg·n) instead of O(m²·n).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine
 from repro.core.compression import Compressor, identity
+from repro.core.mixing import Mixer, as_mixer
 
 GradFn = Callable[[object, object, jax.Array], Tuple[jax.Array, object]]
+MixOp = Union[jax.Array, Mixer]
 
 __all__ = [
     "DPSGDState", "dpsgd_init", "dpsgd_step",
@@ -39,8 +46,10 @@ def stack_params(params0: object, m: int) -> object:
     )
 
 
-def _mix(b: jax.Array, tree: object) -> object:
+def _mix(b: MixOp, tree: object) -> object:
     """Gossip: out_i = sum_j B_ji x_j for every leaf."""
+    if isinstance(b, Mixer):
+        return b.mix(tree)
     return jax.tree_util.tree_map(
         lambda x: jnp.einsum("ji,j...->i...", b.astype(x.dtype), x), tree
     )
@@ -91,7 +100,7 @@ def dpsgd_init(key: jax.Array, params_stacked: object) -> DPSGDState:
 
 
 def dpsgd_step(
-    state: DPSGDState, batch: object, grad_fn: GradFn, b: jax.Array, lr: float
+    state: DPSGDState, batch: object, grad_fn: GradFn, b: MixOp, lr: float
 ) -> Tuple[DPSGDState, dict]:
     key = jax.random.fold_in(state.key, state.step)
     losses, grads = _node_grads(grad_fn, state.params, batch, key)
@@ -120,7 +129,7 @@ def dfedsam_step(
     state: DFedSAMState,
     batch: object,
     grad_fn: GradFn,
-    b: jax.Array,
+    b: MixOp,
     lr: float,
     rho: float = 0.05,
     local_steps: int = 1,
@@ -172,7 +181,7 @@ def choco_step(
     state: ChocoState,
     batch: object,
     grad_fn: GradFn,
-    b: jax.Array,
+    b: MixOp,
     lr: float,
     comp: Compressor,
     gossip_gamma: float = 0.5,
@@ -220,18 +229,15 @@ def beer_step(
     state: BeerState,
     batch: object,
     grad_fn: GradFn,
-    b: jax.Array,
+    b: MixOp,
     lr: float,
     comp: Compressor,
     gossip_gamma: float = 0.5,
 ) -> Tuple[BeerState, dict]:
     key = jax.random.fold_in(state.key, state.step)
-    w_minus_i = b - jnp.eye(b.shape[0], dtype=b.dtype)
-    # x update: mix surrogates, descend tracker
-    mix_h = jax.tree_util.tree_map(
-        lambda h: jnp.einsum("ji,j...->i...", w_minus_i.astype(h.dtype), h),
-        state.h,
-    )
+    mx = as_mixer(b)
+    # x update: mix surrogates with the lazy operator (B − I), descend tracker
+    mix_h = mx.mix_lazy(state.h)
     x_new = jax.tree_util.tree_map(
         lambda x, mh, g: x + gossip_gamma * mh - lr * g,
         state.params, mix_h, state.g,
@@ -241,10 +247,7 @@ def beer_step(
         _compress_tree(comp, jax.random.fold_in(key, 3), _sub(x_new, state.h)),
     )
     losses, grad_new = _node_grads(grad_fn, x_new, batch, key)
-    mix_z = jax.tree_util.tree_map(
-        lambda z: jnp.einsum("ji,j...->i...", w_minus_i.astype(z.dtype), z),
-        state.z,
-    )
+    mix_z = mx.mix_lazy(state.z)
     g_new = jax.tree_util.tree_map(
         lambda g, mz, gn, gp: g + gossip_gamma * mz + gn - gp,
         state.g, mix_z, grad_new, state.prev_grad,
@@ -284,7 +287,7 @@ def nids_step(
     state: NidsState,
     batch: object,
     grad_fn: GradFn,
-    b: jax.Array,
+    b: MixOp,
     lr: float,
     comp: Optional[Compressor] = None,
 ) -> Tuple[NidsState, dict]:
@@ -298,26 +301,20 @@ def nids_step(
     quantization, emulated with difference encoding.
     """
     key = jax.random.fold_in(state.key, state.step)
+    mx = as_mixer(b)
     losses, grad_k = _node_grads(grad_fn, state.params, batch, key)
     u = jax.tree_util.tree_map(
         lambda x, xp, g, gp: 2.0 * x - xp - lr * (g - gp),
         state.params, state.prev_params, grad_k, state.prev_grad,
     )
-    a_tilde = 0.5 * (jnp.eye(b.shape[0], dtype=b.dtype) + b)
     if comp is not None:
         q = _compress_tree(comp, jax.random.fold_in(key, 11), _sub(u, state.hats))
         hats = _add(state.hats, q)
         # node keeps its own exact copy; only off-diagonal mixing is lossy
-        diag = jnp.diag(a_tilde)
-        off = a_tilde - jnp.diag(diag)
-        mixed = jax.tree_util.tree_map(
-            lambda uh, ue: jnp.einsum("ji,j...->i...", off.astype(uh.dtype), uh)
-            + ue * diag.reshape((-1,) + (1,) * (ue.ndim - 1)).astype(ue.dtype),
-            hats, u,
-        )
+        mixed = mx.mix_nids_quantized(hats, u)
     else:
         hats = state.hats
-        mixed = _mix(a_tilde, u)
+        mixed = mx.mix_half(u)
     return (
         NidsState(mixed, state.params, grad_k, hats, state.step + 1, state.key),
         {"loss_mean": jnp.mean(losses)},
@@ -374,4 +371,6 @@ def run_algorithm(
             if len(f_window) >= 3 and float(np.std(f_window[-3:])) < tol_std:
                 break
     history["steps_run"] = len(history["loss"])
+    # same schema as the scan driver; the host loop never over-dispatches
+    history["steps_dispatched"] = history["steps_run"]
     return state, history

@@ -140,10 +140,15 @@ def make_scan_runner(
         state: object,
         batch_fn: Callable[[int], object],
         num_steps: int,
+        *,
+        copy_state: bool = True,
     ) -> Tuple[object, dict, dict]:
-        if donate:
+        if donate and copy_state:
             # The first chunk donates the carry's buffers; copy so the
             # caller's initial state (often shared across runs) survives.
+            # Callers that hand over ownership (e.g. a training loop that
+            # immediately rebinds to the returned state) pass
+            # copy_state=False and skip the deep copy.
             state = jax.tree_util.tree_map(
                 lambda x: x.copy() if isinstance(x, jax.Array) else x, state
             )

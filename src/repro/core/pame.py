@@ -53,6 +53,9 @@ class PaMEConfig:
                              # "compressed" (block-systematic payloads, the
                              # beyond-paper wire format — core.gossip) |
                              # "compressed_q8" (int8 payloads on the wire)
+    mixing: str = "dense"    # node-axis contraction of the dense exchange:
+                             # "dense" ([m, m] selection-matrix einsum) |
+                             # "sparse" (padded neighbor gather, O(m·deg·n))
 
 
 class TopologyArrays(NamedTuple):
@@ -129,20 +132,30 @@ def pame_step(
     )
 
     comm_mask = (state.step % topo.kappa) == 0  # k in K_i
-    a = pme.sample_neighbor_selection(
-        k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
-    )
-    if cfg.exchange in ("compressed", "compressed_q8"):
-        from repro.core import gossip
-
-        v_bar = gossip.compressed_pme_average_pytree(
-            k_mask, state.params, a, cfg.p, shardings=param_shardings,
-            quantize_bits=8 if cfg.exchange == "compressed_q8" else 0,
+    if cfg.exchange == "dense" and cfg.mixing == "sparse":
+        # padded neighbor-exchange: never materialise the [m, m] selection
+        # matrix; gather over max_degree slots instead (same PRNG draws).
+        sel = pme.sample_neighbor_selection_padded(
+            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
+        )
+        v_bar = pme.pme_average_pytree_padded(
+            k_mask, state.params, topo.nbrs, sel, cfg.p, mode=cfg.mask_mode
         )
     else:
-        v_bar = pme.pme_average_pytree(
-            k_mask, state.params, a, cfg.p, mode=cfg.mask_mode
+        a = pme.sample_neighbor_selection(
+            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
         )
+        if cfg.exchange in ("compressed", "compressed_q8"):
+            from repro.core import gossip
+
+            v_bar = gossip.compressed_pme_average_pytree(
+                k_mask, state.params, a, cfg.p, shardings=param_shardings,
+                quantize_bits=8 if cfg.exchange == "compressed_q8" else 0,
+            )
+        else:
+            v_bar = pme.pme_average_pytree(
+                k_mask, state.params, a, cfg.p, mode=cfg.mask_mode
+            )
     if param_shardings is not None:
         v_bar = jax.lax.with_sharding_constraint(v_bar, param_shardings)
 
@@ -220,7 +233,6 @@ def make_pame_runner(
             "objective": "objective",
             "consensus": "consensus",
         })
-        history["bits"] = []
         return state, history
 
     return run
@@ -263,7 +275,7 @@ def run_pame(
     step = jax.jit(
         lambda s, b: pame_step(s, b, grad_fn, topo_arrays, cfg)
     )
-    history = {"loss": [], "objective": [], "consensus": [], "bits": []}
+    history = {"loss": [], "objective": [], "consensus": []}
     f_window: list = []
     for k in range(num_steps):
         batch = batch_fn(k)
@@ -280,4 +292,7 @@ def run_pame(
             if len(f_window) >= 3 and float(np.std(f_window[-3:])) < tol_std:
                 break
     history["steps_run"] = len(history["loss"])
+    # one schema across drivers: the host loop dispatches exactly the steps
+    # it runs (no chunk rounding past an early termination).
+    history["steps_dispatched"] = history["steps_run"]
     return state, history

@@ -28,8 +28,10 @@ import jax.numpy as jnp
 __all__ = [
     "sample_coordinate_masks",
     "sample_neighbor_selection",
+    "sample_neighbor_selection_padded",
     "pme_average",
     "pme_average_pytree",
+    "pme_average_pytree_padded",
     "naive_average",
     "message_bits",
 ]
@@ -38,6 +40,10 @@ __all__ = [
 # exact-mode leaves at least this large route through the fused Pallas
 # kernel (kernels.pme_average); smaller ones stay on the plain einsum.
 _KERNEL_MIN_ELEMS = 1 << 17
+
+# padded PME unrolls one gather+mul+add per neighbor slot; above this
+# degree it switches to a lax.scan over slots (mirrors core.mixing).
+_UNROLL_MAX_SLOTS = 128
 
 
 def sample_coordinate_masks(
@@ -68,6 +74,35 @@ def sample_coordinate_masks(
     raise ValueError(f"unknown mask mode {mode!r}")
 
 
+def sample_neighbor_selection_padded(
+    key: jax.Array,
+    nbrs: jax.Array,  # [m, d] padded neighbor ids
+    valid: jax.Array,  # [m, d] bool
+    t: jax.Array,  # [m] int — t_i = floor(nu_i * |N_i|), >= 1
+    comm_mask: jax.Array,  # [m] bool — k in K_i?
+) -> jax.Array:
+    """Random neighbor selection N_i^k (Alg. 1 line 5) in padded form.
+
+    Returns sel: [m, d] bool where sel[i, slot] marks nbrs[i, slot] as a
+    selected neighbor of receiver i this round.  Rows of non-communicating
+    receivers are all-zero — the "local parameter tracking" branch (Alg. 1
+    line 9) with no per-node cond.  Same PRNG draws as the dense variant,
+    which is just this selection scattered into an [m, m] matrix.
+    """
+    m, d = nbrs.shape
+    u = jax.random.uniform(key, (m, d))
+    u = jnp.where(valid, u, jnp.inf)  # never pick padding
+    # receiver i keeps its t_i smallest draws: a single top_k pass over the
+    # (small) padded-degree axis, then scatter "position < t_i" back through
+    # the sort order — picks the same neighbors as the double-argsort rank
+    # formulation without materialising two full sorts.
+    _, order = jax.lax.top_k(-u, d)  # ascending u per row
+    take = jnp.arange(d)[None, :] < t[:, None]
+    sel = jnp.zeros((m, d), bool).at[jnp.arange(m)[:, None], order].set(take)
+    sel = sel & valid  # [m, d] — receiver i picks these
+    return sel & comm_mask[:, None]
+
+
 def sample_neighbor_selection(
     key: jax.Array,
     nbrs: jax.Array,  # [m, d] padded neighbor ids
@@ -84,23 +119,13 @@ def sample_neighbor_selection(
     the "local parameter tracking" branch (Alg. 1 line 9).
     """
     m, d = nbrs.shape
-    u = jax.random.uniform(key, (m, d))
-    u = jnp.where(valid, u, jnp.inf)  # never pick padding
-    # receiver i keeps its t_i smallest draws: a single top_k pass over the
-    # (small) padded-degree axis, then scatter "position < t_i" back through
-    # the sort order — picks the same neighbors as the double-argsort rank
-    # formulation without materialising two full sorts.
-    _, order = jax.lax.top_k(-u, d)  # ascending u per row
-    take = jnp.arange(d)[None, :] < t[:, None]
-    sel = jnp.zeros((m, d), bool).at[jnp.arange(m)[:, None], order].set(take)
-    sel = sel & valid  # [m, d] — receiver i picks these
+    sel = sample_neighbor_selection_padded(key, nbrs, valid, t, comm_mask)
     # scatter into dense A: receiver on columns.
     onehot = jax.nn.one_hot(nbrs, m, dtype=jnp.float32)  # [m, d, m] sender id
     a_rows_by_receiver = jnp.einsum(
         "idm,id->im", onehot, sel.astype(jnp.float32)
     )  # [receiver, sender]
-    a = a_rows_by_receiver.T  # A[sender, receiver]
-    return a * comm_mask[None, :].astype(a.dtype)
+    return a_rows_by_receiver.T  # A[sender, receiver]
 
 
 def pme_average(
@@ -189,6 +214,71 @@ def pme_average_pytree(
                 cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(leaf.dtype), leaf
             )
             out.append(avg)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pme_average_pytree_padded(
+    key: jax.Array,
+    params: object,  # pytree with [m, ...] leaves
+    nbrs: jax.Array,  # [m, d] padded neighbor ids
+    sel: jax.Array,   # [m, d] bool — sample_neighbor_selection_padded output
+    p: float,
+    mode: str = "bernoulli",
+) -> object:
+    """PME applied leaf-wise through the padded neighbor-exchange form.
+
+    Same estimator as `pme_average_pytree` with a dense selection matrix —
+    v_bar[i, l] = sum over selected neighbors of masked w[j, l] / count,
+    falling back to w[i, l] where the count is zero — but the node-axis
+    contraction is a gather over the d = max_degree slots: O(m·deg·n)
+    instead of the O(m²·n) einsum.  Coordinate masks are drawn exactly as
+    in the dense path (fold_in per leaf), so the two agree to fp tolerance
+    for the same key.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    m, d = nbrs.shape
+    sel_f = sel.astype(jnp.float32)
+    out = []
+    for idx, leaf in enumerate(leaves):
+        lkey = jax.random.fold_in(key, idx)
+        shape = leaf.shape
+        if mode == "exact":
+            flat = leaf.reshape(m, -1)
+            n = flat.shape[1]
+            s = max(1, int(round(p * n)))
+            masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
+            payload = jnp.where(masks, flat, 0.0)
+            mask_f = masks.astype(jnp.float32)
+        else:
+            masks = jax.random.bernoulli(lkey, p, shape)
+            flat = leaf
+            payload = flat * masks.astype(flat.dtype)
+            mask_f = masks.astype(jnp.float32)
+        agg = jnp.zeros(payload.shape, jnp.float32)
+        cnt = jnp.zeros(payload.shape, jnp.float32)
+        if d <= _UNROLL_MAX_SLOTS:
+            for slot in range(d):
+                j = nbrs[:, slot]
+                s_k = sel_f[:, slot].reshape((-1,) + (1,) * (payload.ndim - 1))
+                agg = agg + s_k * payload[j].astype(jnp.float32)
+                cnt = cnt + s_k * mask_f[j]
+        else:
+            # high-degree graphs: scan over slots instead of unrolling
+            # d gather+mul+add triples into the traced program
+            def body(carry, slot):
+                agg_, cnt_ = carry
+                j, s_col = slot
+                s_k = s_col.reshape((-1,) + (1,) * (payload.ndim - 1))
+                return (agg_ + s_k * payload[j].astype(jnp.float32),
+                        cnt_ + s_k * mask_f[j]), None
+
+            (agg, cnt), _ = jax.lax.scan(
+                body, (agg, cnt), (nbrs.T, sel_f.T)
+            )
+        avg = jnp.where(
+            cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(flat.dtype), flat
+        )
+        out.append(avg.reshape(shape))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -68,6 +68,27 @@ class Topology:
             valid[i, : len(ns)] = True
         return nbrs, valid
 
+    def mixing_padded(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The mixing matrix B in padded neighbor-exchange form.
+
+        Returns (nbrs, w, is_self), each [m, max_degree + 1]: row i lists
+        N_i ∪ {i} in ascending sender order with the receive weight
+        w[i, slot] = B[nbrs[i, slot], i]; padding slots repeat i with weight
+        exactly 0.0 so they are no-ops under IEEE summation.  This is the
+        O(m·deg·n) gather form consumed by `repro.core.mixing.mix_padded`,
+        replacing the dense O(m²·n) einsum on sparse graphs.
+        """
+        k = self.max_degree + 1
+        nbrs = np.tile(np.arange(self.m)[:, None], (1, k)).astype(np.int32)
+        w = np.zeros((self.m, k), dtype=np.float32)
+        is_self = np.zeros((self.m, k), dtype=bool)
+        for i, ns in enumerate(self.neighbor_sets):
+            ids = sorted(list(ns) + [i])
+            nbrs[i, : len(ids)] = ids
+            w[i, : len(ids)] = self.mixing[ids, i]
+            is_self[i, : len(ids)] = np.asarray(ids) == i
+        return nbrs, w, is_self
+
 
 def _adjacency_from_edges(m: int, edges: List[Tuple[int, int]]) -> np.ndarray:
     a = np.zeros((m, m), dtype=np.int64)
