@@ -15,6 +15,8 @@ Figure map:
   bench_vs_baselines       Figs 8-10    (Example 2, registry race: PaME vs
                                          D-PSGD/DFedSAM/CHOCO/BEER/ANQ-NIDS)
   bench_mixing             —            (dense einsum vs sparse neighbor gossip)
+  bench_scenarios          —            (dynamic networks: churn x topology race
+                                         with realized per-step wire bits)
   bench_heterogeneity      Figs 11-12   (label-skew CNN / Dirichlet ResNet-20)
   bench_comm_volume        Eq. (8)      (bit accounting, 64/16/8-bit wires)
   bench_kernels            —            (Pallas kernels, interpret-mode checks)
@@ -314,6 +316,90 @@ def bench_mixing(quick=False):
     RESULTS["mixing"] = table
 
 
+def bench_scenarios(quick=False):
+    """Dynamic-network race: churn rate × topology for PaME + two baselines
+    through the scan engine.  Every dynamic step realizes a fresh
+    doubly-stochastic matrix on device (links fail, nodes drop, state of
+    dropped nodes frozen) and only realized edges are charged, so the
+    gbits column is the *surviving-traffic* volume.  churn=0.0 rows run
+    the static fixed-Topology path — the baseline the dynamic rows are
+    read against.  Closes with the sparse-vs-dense scenario-mixing check
+    (same realizations, same realized wire bits, fp-tolerance params)."""
+    from repro.core import algorithms as ALG
+    from repro.core.scenarios import Scenario
+
+    m, n = 16, 300
+    steps = 60 if quick else 120
+    algos = ("pame", "dpsgd", "choco")
+    churns = (0.0, 0.2) if quick else (0.0, 0.1, 0.3)
+    topos = (("ring", {}), ("erdos_renyi", dict(p=0.4, seed=0)))
+    batch, grad_fn, objective = linreg_problem(m, n, spn=64, seed=0)
+    key = jax.random.PRNGKey(0)
+    chunk = chunk_for(steps)
+    hps = {
+        "pame": PaMEConfig(nu=0.3, p=0.3, gamma=1.01, sigma0=8.0),
+        "dpsgd": ALG.DPSGDHp(lr=0.1),
+        "choco": ALG.ChocoHp(lr=0.05, gossip_gamma=0.3, comp_frac=0.3),
+    }
+    table = {}
+    for kind, kwargs in topos:
+        topo = build_topology(kind, m, **kwargs)
+        for churn in churns:
+            scen = Scenario(
+                name=f"churn{churn}", churn=churn,
+                edge_drop=0.1 if churn > 0 else 0.0, seed=1,
+            )
+            for name in algos:
+                bound = ALG.get_algorithm(name).bind(
+                    grad_fn, topo, hps[name], mixing="sparse", scenario=scen
+                )
+                runner = bound.make_runner(
+                    objective_fn=objective, tol_std=1e-3, chunk_size=chunk
+                )
+                runner(key, jnp.zeros(n), m, lambda k: batch, chunk)  # warm-up
+                t0 = time.perf_counter()
+                _, hist = runner(key, jnp.zeros(n), m, lambda k: batch, steps)
+                wall = time.perf_counter() - t0
+                row = {
+                    "final": hist["objective"][-1],
+                    "steps_run": hist["steps_run"],
+                    "gbits": hist["wire_bits_total"] / 1e9,
+                    "us_per_call": wall / max(hist["steps_dispatched"], 1) * 1e6,
+                }
+                if "alive_nodes" in hist:
+                    row["mean_alive"] = float(np.mean(hist["alive_nodes"]))
+                table[f"{kind}_churn{churn}_{name}"] = row
+                csv_row(
+                    f"scenarios/{kind}/churn={churn}/{name}", row["us_per_call"],
+                    f"final_obj={row['final']:.4f};rounds={row['steps_run']}"
+                    f";gbits={row['gbits']:.4f}"
+                    f";mean_alive={row.get('mean_alive', float(m)):.1f}",
+                )
+    # sparse vs dense scenario mixing: identical realizations (same seed)
+    # => identical realized wire bits; params agree to fp tolerance (the
+    # two modes sum the node axis in different slot orders).
+    topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
+    scen = Scenario(name="mix_eq", churn=0.2, edge_drop=0.2, seed=1)
+    outs = {}
+    for mode in ("sparse", "dense"):
+        bound = ALG.get_algorithm("dpsgd").bind(
+            grad_fn, topo, hps["dpsgd"], mixing=mode, scenario=scen
+        )
+        state, hist = bound.run(
+            key, jnp.zeros(n), m, lambda k: batch, 32,
+            tol_std=0.0, chunk_size=16,
+        )
+        outs[mode] = (np.asarray(state.params), hist["wire_bits"])
+    delta = float(np.max(np.abs(outs["sparse"][0] - outs["dense"][0])))
+    wire_equal = outs["sparse"][1] == outs["dense"][1]
+    table["sparse_vs_dense"] = {"max_param_delta": delta, "wire_equal": wire_equal}
+    csv_row(
+        "scenarios/sparse_vs_dense", 0.0,
+        f"max_param_delta={delta:.2e};wire_equal={wire_equal}",
+    )
+    RESULTS["scenarios"] = table
+
+
 def bench_heterogeneity(quick=False):
     """Fig 11 (label skew, CNN) + Fig 12 (Dirichlet, ResNet-20), synthetic
     stand-in images (offline container; heterogeneity mechanism exact)."""
@@ -535,6 +621,7 @@ BENCHES = {
     "connectivity": bench_connectivity,
     "vs_baselines": bench_vs_baselines,
     "mixing": bench_mixing,
+    "scenarios": bench_scenarios,
     "heterogeneity": bench_heterogeneity,
     "comm_volume": bench_comm_volume,
     "kernels": bench_kernels,

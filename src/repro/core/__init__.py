@@ -6,6 +6,7 @@
   pame         — the PaME step (Algorithm 1)
   baselines    — D-PSGD / DFedSAM / CHOCO-SGD / BEER / (AN)Q-NIDS
   algorithms   — unified registry binding all of the above to one contract
+  scenarios    — dynamic networks: per-step link churn, dropout, stragglers
   compression  — rand-k / top-k / QSGD / one-bit operators
   gossip       — mesh-sharded gossip (dense-masked + compressed payload)
 """
@@ -33,4 +34,11 @@ from repro.core.algorithms import (  # noqa: F401
     get_algorithm,
     list_algorithms,
     register,
+)
+from repro.core.scenarios import (  # noqa: F401
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    make_scenario_arrays,
+    realize,
 )

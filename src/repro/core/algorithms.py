@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import baselines as B
 from repro.core import engine
 from repro.core import pame as pame_mod
+from repro.core import scenarios as scen_mod
 from repro.core.compression import qsgd, rand_k
 from repro.core.mixing import Mixer, make_mixer
 from repro.core.pme import message_bits
@@ -131,6 +132,11 @@ class Algorithm:
     needs_batch0: bool = False
     # optional (topo, hps, mixing, seed) -> dict merged into ctx.extras
     setup: Optional[Callable] = None
+    # optional (hps, n) -> bits per realized *directed* edge per step; used
+    # by dynamic-network scenario runs to charge only surviving links.
+    # Algorithms whose step emits its own "wire_bits" metric (PaME) or that
+    # send nothing leave this None.
+    edge_bits: Optional[Callable] = None
 
     def bind(
         self,
@@ -140,7 +146,17 @@ class Algorithm:
         *,
         mixing: str = "sparse",
         seed: int = 0,
+        scenario: Optional[scen_mod.Scenario] = None,
     ) -> "BoundAlgorithm":
+        """Close the spec over (grad_fn, topology, hps, mixing, scenario).
+
+        ``scenario=None`` or a static scenario keeps the existing
+        fixed-``Topology`` program exactly (bit-identical); a dynamic
+        scenario wraps the step so each global step k realizes its own
+        doubly-stochastic mixing matrix on device (see
+        ``repro.core.scenarios``), freezes dropped nodes' state, and logs
+        realized per-step ``wire_bits``.
+        """
         hps = self.hp_cls() if hps is None else hps
         if not isinstance(hps, self.hp_cls):
             raise TypeError(
@@ -152,6 +168,12 @@ class Algorithm:
         mixer = make_mixer(topo, "matrix" if mixing == "matrix" else mixing)
         ctx = AlgoContext(grad_fn=grad_fn, topo=topo, hps=hps, mixer=mixer,
                           extras=extras)
+        if scenario is not None and not scenario.is_static:
+            return BoundAlgorithm(
+                self, ctx, scenario=scenario,
+                scen_arrays=scen_mod.make_scenario_arrays(topo, scenario),
+                mixing_mode=mixing,
+            )
         return BoundAlgorithm(self, ctx)
 
 
@@ -160,11 +182,25 @@ class BoundAlgorithm:
 
     ``step`` is a plain ``(state, batch) -> (state, metrics)`` closure,
     directly consumable by ``engine.make_scan_runner`` or ``jax.jit``.
+    When a dynamic scenario is bound, ``step`` instead takes ``(state,
+    batch, k)`` — the global step index realizes the step's network — and
+    the engine must be built with ``step_takes_index=True`` (``run`` /
+    ``make_runner`` do this automatically).
     """
 
-    def __init__(self, spec: Algorithm, ctx: AlgoContext):
+    def __init__(
+        self,
+        spec: Algorithm,
+        ctx: AlgoContext,
+        scenario: Optional[scen_mod.Scenario] = None,
+        scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
+        mixing_mode: str = "sparse",
+    ):
         self.spec = spec
         self.ctx = ctx
+        self.scenario = scenario
+        self.scen_arrays = scen_arrays
+        self._mixing_mode = mixing_mode
 
     @property
     def name(self) -> str:
@@ -173,6 +209,11 @@ class BoundAlgorithm:
     @property
     def hps(self) -> object:
         return self.ctx.hps
+
+    @property
+    def dynamic(self) -> bool:
+        """True when a non-static scenario is bound (step takes k)."""
+        return self.scenario is not None
 
     @property
     def params_of(self) -> Callable:
@@ -184,8 +225,44 @@ class BoundAlgorithm:
             raise ValueError(f"{self.name} needs batch0 at init")
         return self.spec.init(key, params_stacked, self.ctx, batch0)
 
-    def step(self, state: object, batch: object) -> Tuple[object, dict]:
-        return self.spec.step(state, batch, self.ctx)
+    def step(self, state: object, batch: object,
+             k: Optional[jax.Array] = None) -> Tuple[object, dict]:
+        if not self.dynamic:
+            return self.spec.step(state, batch, self.ctx)
+        if k is None:
+            raise TypeError(
+                f"{self.name} is bound to scenario {self.scenario.name!r}: "
+                "step(state, batch, k) needs the global step index"
+            )
+        return self._dynamic_step(state, batch, jnp.asarray(k, jnp.int32))
+
+    def _dynamic_step(self, state: object, batch: object,
+                      k: jax.Array) -> Tuple[object, dict]:
+        """One step under the bound scenario (fully traceable).
+
+        Realizes step k's graph from the folded scenario key, swaps the
+        per-step mixer into the context, reverts dropped nodes' state
+        bitwise, and charges only realized edges on the wire.
+        """
+        r = scen_mod.realize(self.scenario, self.scen_arrays, k)
+        mixer = scen_mod.scenario_mixer(self.scen_arrays, r, self._mixing_mode)
+        ctx_t = dataclasses.replace(
+            self.ctx, mixer=mixer,
+            extras={**self.ctx.extras, "realization": r},
+        )
+        new_state, metrics = self.spec.step(state, batch, ctx_t)
+        new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
+        if "wire_bits" not in metrics:
+            n = sum(
+                int(np.prod(leaf.shape[1:]))
+                for leaf in jax.tree_util.tree_leaves(self.spec.params_of(state))
+            )
+            eb = self.spec.edge_bits(self.ctx.hps, n) if self.spec.edge_bits else 0.0
+            metrics["wire_bits"] = (
+                r.directed_edges.astype(jnp.float32) * float(eb)
+            )
+        metrics["alive_nodes"] = jnp.sum(r.alive.astype(jnp.int32))
+        return new_state, metrics
 
     def wire_bits(self, n: int) -> float:
         """Expected bits on the wire per step, summed over the network."""
@@ -203,6 +280,7 @@ class BoundAlgorithm:
         runner = engine.make_scan_runner(
             self.step, objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, chunk_size=chunk_size,
+            step_takes_index=self.dynamic,
         )
 
         def run(key, params0, m, batch_fn, num_steps):
@@ -242,11 +320,21 @@ class BoundAlgorithm:
             self.step, state, batch_fn, num_steps,
             objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, driver=driver, chunk_size=chunk_size,
+            step_takes_index=self.dynamic,
         )
         self._account_wire(history, params0)
         return state, history
 
     def _account_wire(self, history: dict, params0: object) -> None:
+        per_step = history.get("wire_bits")
+        if per_step:
+            # dynamic scenario: only realized (surviving) edges were charged
+            history["wire_bits_total"] = float(np.sum(per_step))
+            history["wire_bits_per_step"] = (
+                history["wire_bits_total"] / max(len(per_step), 1)
+            )
+            return
+        history.pop("wire_bits", None)  # static runs keep the legacy schema
         n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params0))
         history["wire_bits_per_step"] = self.wire_bits(n)
         history["wire_bits_total"] = (
@@ -287,9 +375,30 @@ def _dense_edges_bits(topo: Topology, n: int, bits_per_msg: float) -> float:
     return float(topo.degrees.sum()) * bits_per_msg
 
 
+# bits per *directed* edge per step for the gossip baselines; the static
+# wire_bits formulas below are (base directed edge count) × these, and the
+# dynamic scenario path charges (realized directed edge count) × these.
+def _full_msg_bits(hps, n: int) -> float:
+    return float(message_bits(n, n))
+
+
+def _choco_edge_bits(hps, n: int) -> float:
+    return float(rand_k(hps.comp_frac, hps.value_bits, rescale=False).bits(n))
+
+
+def _beer_edge_bits(hps, n: int) -> float:
+    # two compressed streams per edge per step (x and gradient surrogates)
+    return 2.0 * _choco_edge_bits(hps, n)
+
+
+def _anq_edge_bits(hps, n: int) -> float:
+    return float(qsgd(hps.qsgd_levels).bits(n))
+
+
 def _pame_wire_bits(topo: Topology, hps: PaMEHp, n: int) -> float:
     """Expected bits/step: receiver i pulls t_i sparse messages of
-    message_bits(s, n) in the 1/kappa_i fraction of steps it communicates."""
+    message_bits(s, n) in the 1/kappa_i fraction of steps it communicates
+    (int8 message format when exchange="compressed_q8")."""
     s = max(1, int(round(hps.p * n)))
     t = np.maximum(1, np.floor(hps.nu * topo.degrees))
     if hps.homogeneous_kappa is not None:
@@ -297,7 +406,8 @@ def _pame_wire_bits(topo: Topology, hps: PaMEHp, n: int) -> float:
     else:
         ks = np.arange(hps.kappa_lo, hps.kappa_hi + 1, dtype=np.float64)
         inv_kappa = float(np.mean(1.0 / ks))
-    return float(t.sum()) * inv_kappa * message_bits(s, n)
+    value_bits = 8 if hps.exchange == "compressed_q8" else 64
+    return float(t.sum()) * inv_kappa * message_bits(s, n, value_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -319,9 +429,12 @@ register(Algorithm(
     init=lambda key, stacked, ctx, batch0: pame_mod.pame_init(
         key, stacked, ctx.topo.m, ctx.hps),
     step=lambda state, batch, ctx: pame_mod.pame_step(
-        state, batch, ctx.grad_fn, ctx.extras["topo_arrays"], ctx.hps),
+        state, batch, ctx.grad_fn, ctx.extras["topo_arrays"], ctx.hps,
+        realization=ctx.extras.get("realization")),
     wire_bits=_pame_wire_bits,
     setup=_pame_setup,
+    # PaME's step emits its own realized "wire_bits" (per-message Eq. (8)
+    # on the selected surviving neighbors), so no per-edge rate here.
 ))
 
 register(Algorithm(
@@ -331,7 +444,8 @@ register(Algorithm(
     step=lambda state, batch, ctx: B.dpsgd_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
-        topo, n, message_bits(n, n)),
+        topo, n, _full_msg_bits(hps, n)),
+    edge_bits=_full_msg_bits,
 ))
 
 register(Algorithm(
@@ -342,7 +456,8 @@ register(Algorithm(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
         rho=ctx.hps.rho, local_steps=ctx.hps.local_steps),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
-        topo, n, message_bits(n, n)),
+        topo, n, _full_msg_bits(hps, n)),
+    edge_bits=_full_msg_bits,
 ))
 
 
@@ -358,7 +473,8 @@ register(Algorithm(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
         ctx.extras["comp"], ctx.hps.gossip_gamma),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
-        topo, n, rand_k(hps.comp_frac, hps.value_bits, rescale=False).bits(n)),
+        topo, n, _choco_edge_bits(hps, n)),
+    edge_bits=_choco_edge_bits,
     setup=_choco_setup,
 ))
 
@@ -370,9 +486,9 @@ register(Algorithm(
     step=lambda state, batch, ctx: B.beer_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
         ctx.extras["comp"], ctx.hps.gossip_gamma),
-    # two compressed streams per edge per step (x and gradient surrogates)
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
-        topo, n, 2 * rand_k(hps.comp_frac, hps.value_bits, rescale=False).bits(n)),
+        topo, n, _beer_edge_bits(hps, n)),
+    edge_bits=_beer_edge_bits,
     needs_batch0=True,
     setup=_choco_setup,
 ))
@@ -385,7 +501,8 @@ register(Algorithm(
     step=lambda state, batch, ctx: B.nids_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr, ctx.extras["q"]),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
-        topo, n, qsgd(hps.qsgd_levels).bits(n)),
+        topo, n, _anq_edge_bits(hps, n)),
+    edge_bits=_anq_edge_bits,
     needs_batch0=True,
     setup=lambda topo, hps, mixing, seed: {"q": qsgd(hps.qsgd_levels)},
 ))

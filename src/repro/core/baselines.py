@@ -334,6 +334,7 @@ def run_algorithm(
     tol_std: float = 1e-3,
     driver: str = "scan",
     chunk_size: int = engine.DEFAULT_CHUNK_SIZE,
+    step_takes_index: bool = False,
 ) -> Tuple[object, dict]:
     """Race driver shared by every baseline.
 
@@ -341,16 +342,26 @@ def run_algorithm(
     (`repro.core.engine`): one dispatch per `chunk_size` steps, donated
     state, a single bulk metric readback, and the std termination rule
     evaluated on-device.  driver="host" is the original per-step loop.
+    `step_takes_index=True` feeds the global step index as a third step
+    argument (dynamic-network scenario steps) on both drivers; their
+    realized per-step "wire_bits" metric joins the history when emitted.
     """
     if driver == "scan":
         state, metrics, info = engine.run_scan_loop(
             step_fn, state, batch_fn, num_steps,
             objective_fn=objective_fn, params_of=params_of,
             tol_std=tol_std, chunk_size=chunk_size,
+            step_takes_index=step_takes_index,
         )
-        return state, engine.history_from(
-            metrics, info, {"loss": "loss_mean", "objective": "objective"}
+        history = engine.history_from(
+            metrics, info,
+            {"loss": "loss_mean", "objective": "objective",
+             "wire_bits": "wire_bits", "alive_nodes": "alive_nodes"},
         )
+        for key in ("wire_bits", "alive_nodes"):
+            if not history[key]:  # static runs keep the legacy schema
+                history.pop(key)
+        return state, history
     if driver != "host":
         raise ValueError(f"unknown driver {driver!r}")
     import numpy as np
@@ -359,7 +370,13 @@ def run_algorithm(
     history = {"loss": [], "objective": []}
     f_window: list = []
     for k in range(num_steps):
-        state, metrics = step(state, batch_fn(k))
+        if step_takes_index:
+            state, metrics = step(state, batch_fn(k), jnp.asarray(k, jnp.int32))
+        else:
+            state, metrics = step(state, batch_fn(k))
+        for key in ("wire_bits", "alive_nodes"):
+            if key in metrics:
+                history.setdefault(key, []).append(float(metrics[key]))
         history["loss"].append(float(metrics["loss_mean"]))
         if objective_fn is not None:
             mean_params = jax.tree_util.tree_map(

@@ -79,6 +79,7 @@ def make_scan_runner(
     tol_std: float = 1e-3,
     chunk_size: int = DEFAULT_CHUNK_SIZE,
     donate: bool = True,
+    step_takes_index: bool = False,
 ) -> Callable[..., Tuple[object, dict, dict]]:
     """Build a reusable chunked-scan driver.
 
@@ -90,17 +91,32 @@ def make_scan_runner(
     termination — the right denominator for wall-clock-per-step).  Compiled
     chunk executables are cached on the runner, so repeat runs with the
     same shapes skip compilation.
+
+    ``step_takes_index=True`` calls ``step_fn(state, batch, k)`` with the
+    global step index as a traced i32 scalar — dynamic-network scenario
+    steps fold it into their PRNG key to realize the step's graph inside
+    the scan (the scenario's counter rides the scan carry alongside the
+    algorithm state).  ``run(..., k_start=)`` offsets the index for
+    callers that drive chunks manually (e.g. the training CLI), so
+    realizations stay aligned with the global step across runner calls.
+    The default (False) leaves the traced program unchanged.
     """
 
-    def _scan_body(carry: _Carry, k: jax.Array, batch: object):
-        new_state, metrics = step_fn(carry.state, batch)
+    def _scan_body(carry: _Carry, k: jax.Array, k_rel: jax.Array, batch: object):
+        if step_takes_index:
+            new_state, metrics = step_fn(carry.state, batch, k)
+        else:
+            new_state, metrics = step_fn(carry.state, batch)
         if objective_fn is not None:
             mean_params = jax.tree_util.tree_map(
                 lambda x: x.mean(axis=0), params_of(new_state)
             )
             obj = objective_fn(mean_params).astype(jnp.float32)
             win = jnp.concatenate([carry.win[1:], obj[None]])
-            trigger = (k >= 2) & (jnp.std(win) < tol_std)
+            # guard on steps into *this run* (k_rel), not the global index:
+            # each run() starts a fresh zero window, and a k_start > 0 run
+            # must still fill all three slots before the rule can fire.
+            trigger = (k_rel >= 2) & (jnp.std(win) < tol_std)
         else:
             obj = None
             win = carry.win
@@ -123,13 +139,14 @@ def make_scan_runner(
         key = (length, const_batch)
         if key not in compiled:
 
-            def chunk(carry, batch, k0):
+            def chunk(carry, batch, k0, r0):
                 ks = k0 + jnp.arange(length)
+                rs = r0 + jnp.arange(length)
                 if const_batch:
-                    body = lambda c, k: _scan_body(c, k, batch)
-                    return jax.lax.scan(body, carry, ks)
-                body = lambda c, kb: _scan_body(c, kb[0], kb[1])
-                return jax.lax.scan(body, carry, (ks, batch))
+                    body = lambda c, kr: _scan_body(c, kr[0], kr[1], batch)
+                    return jax.lax.scan(body, carry, (ks, rs))
+                body = lambda c, krb: _scan_body(c, krb[0], krb[1], krb[2])
+                return jax.lax.scan(body, carry, (ks, rs, batch))
 
             compiled[key] = jax.jit(
                 chunk, donate_argnums=(0,) if donate else ()
@@ -142,6 +159,7 @@ def make_scan_runner(
         num_steps: int,
         *,
         copy_state: bool = True,
+        k_start: int = 0,
     ) -> Tuple[object, dict, dict]:
         if donate and copy_state:
             # The first chunk donates the carry's buffers; copy so the
@@ -174,9 +192,10 @@ def make_scan_runner(
             )
 
         ys_chunks = []
-        k0 = 0
-        while k0 < num_steps:
-            length = min(chunk_size, num_steps - k0)
+        k0 = k_start
+        end = k_start + num_steps
+        while k0 < end:
+            length = min(chunk_size, end - k0)
             batches = [batch_fn(k) for k in range(k0, k0 + length)]
             leaves0, treedef0 = jax.tree_util.tree_flatten(batches[0])
             const = all(_same_batch(b, batches[0]) for b in batches[1:])
@@ -187,7 +206,8 @@ def make_scan_runner(
                     lambda *xs: jnp.stack(xs), *batches
                 )
             carry, ys = _chunk_fn(length, const)(
-                carry, batch, jnp.asarray(k0, jnp.int32)
+                carry, batch, jnp.asarray(k0, jnp.int32),
+                jnp.asarray(k0 - k_start, jnp.int32),
             )
             ys_chunks.append(ys)
             k0 += length
@@ -207,7 +227,7 @@ def make_scan_runner(
         metrics = {key: val[:steps_run] for key, val in host.items()}
         return carry.state, metrics, {
             "steps_run": steps_run,
-            "steps_dispatched": k0,
+            "steps_dispatched": k0 - k_start,
         }
 
     return run
@@ -224,6 +244,7 @@ def run_scan_loop(
     tol_std: float = 1e-3,
     chunk_size: int = DEFAULT_CHUNK_SIZE,
     donate: bool = True,
+    step_takes_index: bool = False,
 ) -> Tuple[object, dict, dict]:
     """One-shot convenience wrapper over `make_scan_runner`."""
     runner = make_scan_runner(
@@ -233,5 +254,6 @@ def run_scan_loop(
         tol_std=tol_std,
         chunk_size=chunk_size,
         donate=donate,
+        step_takes_index=step_takes_index,
     )
     return runner(state, batch_fn, num_steps)

@@ -49,9 +49,16 @@ _UNROLL_MAX_SLOTS = 128
 class PaddedMixing(NamedTuple):
     """A mixing matrix in padded neighbor-exchange form.
 
-    nbrs[i, slot] lists N_i ∪ {i} ascending (padding repeats i), w[i, slot]
-    is the receive weight B[nbrs[i, slot], i] (exactly 0.0 on padding), and
+    nbrs[i, slot] lists N_i ∪ {i} (padding repeats i), w[i, slot] is the
+    receive weight B[nbrs[i, slot], i] (exactly 0.0 on padding), and
     is_self marks the slot holding the receiver itself.
+
+    Slot order is layout-defined: `Topology.mixing_padded` lists N_i ∪ {i}
+    ascending, which is what the dense/sparse bit-identity guarantee in
+    this module's header is predicated on.  Per-step scenario mixers
+    (`repro.core.scenarios.scenario_mixer`) use a neighbors-then-self
+    layout instead — correct to fp tolerance, but *not* bit-identical to
+    an ascending-ordered counterpart.
     """
 
     nbrs: jax.Array     # [m, k] int32
@@ -115,17 +122,20 @@ def _dense_padded(bmat: jax.Array) -> PaddedMixing:
 class Mixer:
     """Gossip operator with interchangeable dense / sparse implementations.
 
-    `b` is always the dense [m, m] matrix (reference + wire accounting);
-    `pm` is the padded form used by the "dense"/"sparse" modes.
+    `b` is the dense [m, m] matrix (reference + wire accounting); it is
+    required by the "matrix"/"dense" modes but may be None for "sparse"
+    mixers built per step inside a traced scenario step, where
+    materializing [m, m] would defeat the padded form.  `pm` is the padded
+    form used by the "dense"/"sparse" modes.
     """
 
     mode: str                       # "matrix" | "dense" | "sparse"
-    b: jax.Array                    # [m, m]
+    b: Optional[jax.Array]          # [m, m], or None for per-step sparse
     pm: Optional[PaddedMixing] = None
 
     @property
     def m(self) -> int:
-        return self.b.shape[0]
+        return self.pm.m if self.b is None else self.b.shape[0]
 
     def mix(self, tree: object) -> object:
         """out_i = sum_j B_ji x_j."""

@@ -125,6 +125,9 @@ def pame_step(
     cfg: PaMEConfig,
     param_shardings: Optional[object] = None,  # pin v_bar's layout so the
     # gossip einsum cannot re-shard the whole model compute downstream
+    realization: Optional[object] = None,  # scenarios.Realization — dynamic
+    # network state for this step; restricts PME to surviving neighbors and
+    # adds realized wire-bit metrics.  None keeps the static program as-is.
 ) -> Tuple[PaMEState, dict]:
     m = topo.nbrs.shape[0]
     k_sel, k_mask, k_data = (
@@ -132,19 +135,27 @@ def pame_step(
     )
 
     comm_mask = (state.step % topo.kappa) == 0  # k in K_i
+    survivors = None
+    if realization is not None:
+        # offline / straggling receivers skip the exchange entirely; the
+        # sender side is filtered through the realized edge set below.
+        comm_mask = comm_mask & realization.participating
+        survivors = realization.edge_alive
     if cfg.exchange == "dense" and cfg.mixing == "sparse":
         # padded neighbor-exchange: never materialise the [m, m] selection
         # matrix; gather over max_degree slots instead (same PRNG draws).
         sel = pme.sample_neighbor_selection_padded(
-            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
+            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask, survivors=survivors
         )
+        n_messages = jnp.sum(sel.astype(jnp.int32))
         v_bar = pme.pme_average_pytree_padded(
             k_mask, state.params, topo.nbrs, sel, cfg.p, mode=cfg.mask_mode
         )
     else:
         a = pme.sample_neighbor_selection(
-            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask
+            k_sel, topo.nbrs, topo.valid, topo.t, comm_mask, survivors=survivors
         )
+        n_messages = jnp.sum(a).astype(jnp.int32)
         if cfg.exchange in ("compressed", "compressed_q8"):
             from repro.core import gossip
 
@@ -186,6 +197,19 @@ def pame_step(
         "comm_nodes": jnp.sum(comm_mask.astype(jnp.int32)),
         "sigma_mean": jnp.mean(new_state.sigma),
     }
+    if realization is not None:
+        # realized Eq.-(8) accounting: each selected surviving neighbor
+        # transmits one sparse message of s = round(p·n) of n coordinates,
+        # in the int8 wire format when exchange="compressed_q8".
+        n_total = sum(
+            int(np.prod(leaf.shape[1:]))
+            for leaf in jax.tree_util.tree_leaves(state.params)
+        )
+        s = max(1, int(round(cfg.p * n_total)))
+        value_bits = 8 if cfg.exchange == "compressed_q8" else 64
+        metrics["wire_bits"] = n_messages.astype(jnp.float32) * float(
+            pme.message_bits(s, n_total, value_bits)
+        )
     return new_state, metrics
 
 

@@ -20,7 +20,7 @@ payload path (values + PRNG seed instead of dense masked vectors) lives in
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,7 @@ def sample_neighbor_selection_padded(
     valid: jax.Array,  # [m, d] bool
     t: jax.Array,  # [m] int — t_i = floor(nu_i * |N_i|), >= 1
     comm_mask: jax.Array,  # [m] bool — k in K_i?
+    survivors: Optional[jax.Array] = None,  # [m, d] bool — realized edges
 ) -> jax.Array:
     """Random neighbor selection N_i^k (Alg. 1 line 5) in padded form.
 
@@ -88,7 +89,14 @@ def sample_neighbor_selection_padded(
     receivers are all-zero — the "local parameter tracking" branch (Alg. 1
     line 9) with no per-node cond.  Same PRNG draws as the dense variant,
     which is just this selection scattered into an [m, m] matrix.
+
+    Under a dynamic-network scenario, `survivors` restricts selection to
+    the step's realized edge set (`Realization.edge_alive`): dropped links
+    and offline neighbors can never be picked, and a receiver with fewer
+    than t_i surviving neighbors simply pulls from all of them.
     """
+    if survivors is not None:
+        valid = valid & survivors
     m, d = nbrs.shape
     u = jax.random.uniform(key, (m, d))
     u = jnp.where(valid, u, jnp.inf)  # never pick padding
@@ -109,6 +117,7 @@ def sample_neighbor_selection(
     valid: jax.Array,  # [m, d] bool
     t: jax.Array,  # [m] int — t_i = floor(nu_i * |N_i|), >= 1
     comm_mask: jax.Array,  # [m] bool — k in K_i?
+    survivors: Optional[jax.Array] = None,  # [m, d] bool — realized edges
 ) -> jax.Array:
     """Random neighbor selection N_i^k (Alg. 1 line 5) as a matrix A.
 
@@ -116,10 +125,13 @@ def sample_neighbor_selection(
     neighbor of receiver i this round (column i describes N_i^k).  Columns
     of non-communicating receivers are all-zero, which makes every
     coordinate count lambda_{i,l} = 0 and PME fall back to w_i — exactly
-    the "local parameter tracking" branch (Alg. 1 line 9).
+    the "local parameter tracking" branch (Alg. 1 line 9).  `survivors`
+    restricts selection to a scenario's realized edge set.
     """
     m, d = nbrs.shape
-    sel = sample_neighbor_selection_padded(key, nbrs, valid, t, comm_mask)
+    sel = sample_neighbor_selection_padded(
+        key, nbrs, valid, t, comm_mask, survivors=survivors
+    )
     # scatter into dense A: receiver on columns.
     onehot = jax.nn.one_hot(nbrs, m, dtype=jnp.float32)  # [m, d, m] sender id
     a_rows_by_receiver = jnp.einsum(

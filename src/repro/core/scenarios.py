@@ -1,0 +1,333 @@
+"""Dynamic-network scenarios: time-varying graphs, churn, and stragglers.
+
+The paper's Assumption 1 only requires the per-round communication matrix
+B^k to be doubly stochastic — it never requires the *same* graph every
+round.  This module turns a static `Topology` into a per-step realization
+sampled on device from a folded PRNG key, so every registered algorithm
+can be raced under realistic network dynamics without leaving the scan:
+
+  * `Scenario`       — the spec: per-step link-failure probability, node
+                       churn (full dropout), and straggler probability.
+                       Per-step edge *resampling* of a graph family is the
+                       same mechanism (dynamic Erdős–Rényi = a denser base
+                       graph + `edge_drop`).
+  * `ScenarioArrays` — the static device-side view (padded neighbor table
+                       of the base graph + the scenario PRNG key).
+  * `realize`        — fold the key with the global step index and sample
+                       the step's masks, then rebuild Metropolis–Hastings
+                       weights from the *realized* degrees.  The realized
+                       matrix is symmetric and doubly stochastic over the
+                       surviving subgraph pointwise: every non-participant
+                       self-loops with weight exactly 1, so Assumption 1
+                       holds at every step.
+  * `scenario_mixer` — wrap a realization as a `repro.core.mixing.Mixer`
+                       (padded-gather "sparse", full "dense", or legacy
+                       "matrix"), constructed *inside* the traced step —
+                       no host round-trips under `jit`/`vmap`/`scan`.
+  * `freeze_dropped` — revert every node-stacked floating leaf of an
+                       algorithm state for nodes that dropped this step: a
+                       dropped node computes nothing, so its entire
+                       per-node state is bitwise untouched.
+
+Semantics of the three failure modes:
+
+  * `edge_drop`  — each base edge fails independently per step (both
+                   directions together: links are undirected).
+  * `churn`      — the node is fully offline for the step: it neither
+                   communicates nor applies a local update; its state is
+                   frozen and the realized matrix gives it B_ii = 1.
+  * `straggler`  — the node misses the exchange window: it is excluded
+                   from communication (self-loop in B^k) but still applies
+                   its local gradient step.
+
+Static scenarios (`is_static`) are handled by `Algorithm.bind` as the
+existing fixed-`Topology` path — the exact same program, bit-identical by
+construction.
+
+Fidelity caveat (surrogate-state algorithms): the simulation keeps ONE
+global copy of each node's public surrogate (CHOCO/BEER's hats, NIDS's
+difference-encoded u-hat).  In a real deployment every neighbor holds its
+own replica, and an innovation lost to a down link desyncs that replica
+until repaired.  Here a neighbor that misses an innovation reads the
+fully up-to-date surrogate as soon as the link is back, without the
+repair traffic ever being sent or charged — so under `edge_drop`/`churn`
+the compressed baselines' convergence is mildly optimistic and their
+realized wire bits a lower bound.  Per-receiver surrogate replicas
+([m, m, ...] state) would close this gap; see ROADMAP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixing import Mixer, PaddedMixing, _dense_padded
+from repro.core.topology import Topology
+
+__all__ = [
+    "Scenario",
+    "ScenarioArrays",
+    "Realization",
+    "SCENARIO_PRESETS",
+    "get_scenario",
+    "list_scenarios",
+    "make_scenario_arrays",
+    "realize",
+    "realization_from_masks",
+    "realization_matrix",
+    "scenario_mixer",
+    "freeze_dropped",
+    "expected_matrix",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Per-step network dynamics, sampled i.i.d. across steps.
+
+    All probabilities are python floats baked into the traced step (the
+    per-step *draws* are device-side, keyed on fold_in(key, step)).
+    """
+
+    name: str = "custom"
+    edge_drop: float = 0.0   # P[a base edge fails this step]
+    churn: float = 0.0       # P[a node is fully offline this step]
+    straggler: float = 0.0   # P[a node misses the exchange this step]
+    seed: int = 0
+
+    def __post_init__(self):
+        for field in ("edge_drop", "churn", "straggler"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field}={v} must be a probability in [0, 1]")
+
+    @property
+    def is_static(self) -> bool:
+        """True iff every step realizes the base graph exactly."""
+        return self.edge_drop == self.churn == self.straggler == 0.0
+
+
+SCENARIO_PRESETS = {
+    "static": Scenario(name="static"),
+    "flaky_links": Scenario(name="flaky_links", edge_drop=0.2),
+    "churn": Scenario(name="churn", churn=0.1),
+    "stragglers": Scenario(name="stragglers", straggler=0.3),
+    # dynamic Erdős–Rényi: pair with a dense base graph (e.g. complete)
+    "dynamic_er": Scenario(name="dynamic_er", edge_drop=0.5),
+    "harsh": Scenario(name="harsh", edge_drop=0.2, churn=0.1, straggler=0.2),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIO_PRESETS:
+        raise ValueError(
+            f"unknown scenario {name!r}; pick from {sorted(SCENARIO_PRESETS)}"
+        )
+    return SCENARIO_PRESETS[name]
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(SCENARIO_PRESETS)
+
+
+class ScenarioArrays(NamedTuple):
+    """Static device-side view of the base graph for in-scan realization.
+
+    Slot layout: the first d = max_degree slots are the base graph's padded
+    neighbor table (`Topology.neighbor_matrix_padded` — ascending neighbor
+    ids, padding repeats the row's own id with `valid` False); slot d is
+    the receiver itself.  This layout is shared with PaME's
+    `TopologyArrays`, so a realization's `edge_alive` mask applies to both
+    directly.
+    """
+
+    nbrs: jax.Array       # [m, d] padded neighbor ids (no self slot)
+    valid: jax.Array      # [m, d] bool — real base-graph edges
+    nbrs_full: jax.Array  # [m, d+1] — neighbors then self
+    is_self: jax.Array    # [m, d+1] bool — True only on the last slot
+    key: jax.Array        # scenario PRNG key (fold_in with the step index)
+
+    @property
+    def m(self) -> int:
+        return self.nbrs.shape[0]
+
+
+class Realization(NamedTuple):
+    """One step's sampled network state (all leaves device-side)."""
+
+    edge_alive: jax.Array      # [m, d] bool — realized bidirectional edges
+    alive: jax.Array           # [m] bool — node not dropped by churn
+    participating: jax.Array   # [m] bool — alive and not a straggler
+    weights: jax.Array         # [m, d+1] f32 — per-slot receive weights
+    directed_edges: jax.Array  # i32 scalar — realized directed edge count
+
+
+def make_scenario_arrays(topo: Topology, scenario: Scenario) -> ScenarioArrays:
+    nbrs, valid = topo.neighbor_matrix_padded()
+    m, d = nbrs.shape
+    self_col = np.arange(m, dtype=nbrs.dtype)[:, None]
+    is_self = np.zeros((m, d + 1), dtype=bool)
+    is_self[:, d] = True
+    return ScenarioArrays(
+        nbrs=jnp.asarray(nbrs, jnp.int32),
+        valid=jnp.asarray(valid),
+        nbrs_full=jnp.asarray(np.concatenate([nbrs, self_col], axis=1), jnp.int32),
+        is_self=jnp.asarray(is_self),
+        key=jax.random.PRNGKey(scenario.seed),
+    )
+
+
+def realization_from_masks(
+    arrays: ScenarioArrays,
+    edge_up: jax.Array,      # [m, d] bool — link-level survival (symmetric)
+    alive: jax.Array,        # [m] bool
+    straggler: jax.Array,    # [m] bool
+) -> Realization:
+    """Build the step's doubly-stochastic weights from explicit masks.
+
+    Metropolis–Hastings over the realized degrees: w_ij = 1/(1 + max(d_i,
+    d_j)) on realized edges, the self slot absorbs the remainder.  Both
+    the edge mask and the weight formula are symmetric, so the realized
+    matrix is symmetric ⇒ doubly stochastic; isolated / non-participating
+    nodes get a self-loop of weight exactly 1.
+    """
+    participating = alive & ~straggler
+    edge_alive = (
+        arrays.valid
+        & edge_up
+        & participating[:, None]
+        & participating[arrays.nbrs]
+    )
+    deg = jnp.sum(edge_alive, axis=1).astype(jnp.float32)        # realized d_i
+    deg_nbr = deg[arrays.nbrs]                                   # realized d_j
+    w_off = jnp.where(
+        edge_alive,
+        1.0 / (1.0 + jnp.maximum(deg[:, None], deg_nbr)),
+        0.0,
+    ).astype(jnp.float32)
+    self_w = 1.0 - jnp.sum(w_off, axis=1)
+    weights = jnp.concatenate([w_off, self_w[:, None]], axis=1)
+    return Realization(
+        edge_alive=edge_alive,
+        alive=alive,
+        participating=participating,
+        weights=weights,
+        directed_edges=jnp.sum(edge_alive.astype(jnp.int32)),
+    )
+
+
+def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realization:
+    """Sample step k's network realization (traceable; `k` may be traced).
+
+    Edge survival is drawn once per *undirected* link: the uniform draw for
+    the pair (i, j) is read at (min, max), so both directions agree and
+    the realized adjacency stays symmetric.
+    """
+    m, d = arrays.nbrs.shape
+    kk = jax.random.fold_in(arrays.key, k)
+    k_edge, k_node, k_strag = jax.random.split(kk, 3)
+
+    alive = jnp.ones((m,), bool)
+    if scenario.churn > 0.0:
+        alive = ~jax.random.bernoulli(k_node, scenario.churn, (m,))
+    straggler = jnp.zeros((m,), bool)
+    if scenario.straggler > 0.0:
+        straggler = jax.random.bernoulli(k_strag, scenario.straggler, (m,))
+    edge_up = jnp.ones((m, d), bool)
+    if scenario.edge_drop > 0.0:
+        u = jax.random.uniform(k_edge, (m, m))
+        row = jnp.arange(m, dtype=arrays.nbrs.dtype)[:, None]
+        lo = jnp.minimum(row, arrays.nbrs)
+        hi = jnp.maximum(row, arrays.nbrs)
+        edge_up = u[lo, hi] >= scenario.edge_drop
+    return realization_from_masks(arrays, edge_up, alive, straggler)
+
+
+def realization_matrix(arrays: ScenarioArrays, r: Realization) -> jax.Array:
+    """The realized [m, m] doubly-stochastic matrix (row i = receiver i).
+
+    Symmetric, so it equals the B^k of Assumption 1 in either convention.
+    Padding slots carry weight exactly 0 and scatter onto the diagonal,
+    where they are additive no-ops.
+    """
+    m = arrays.m
+    rows = jnp.broadcast_to(
+        jnp.arange(m, dtype=jnp.int32)[:, None], arrays.nbrs_full.shape
+    )
+    return (
+        jnp.zeros((m, m), jnp.float32)
+        .at[rows, arrays.nbrs_full]
+        .add(r.weights)
+    )
+
+
+def scenario_mixer(
+    arrays: ScenarioArrays, r: Realization, mode: str = "sparse"
+) -> Mixer:
+    """Wrap one step's realization as a gossip `Mixer`.
+
+    Constructed inside the traced step — per-step weights only, the
+    neighbor table stays static, so this is scan/vmap-safe with no host
+    round-trips.  "sparse" gathers over the padded slots (O(m·deg·n));
+    "dense"/"matrix" materialize the [m, m] realized matrix.
+
+    Slot layout is neighbors-then-self (`ScenarioArrays`), not the
+    ascending interleaved order of `Topology.mixing_padded`, so sparse
+    and dense scenario mixers agree to fp tolerance only — the static
+    path's bitwise dense/sparse identity does not extend here (the
+    conformance tests compare with tolerance accordingly).
+    """
+    if mode == "sparse":
+        pm = PaddedMixing(arrays.nbrs_full, r.weights, arrays.is_self)
+        return Mixer("sparse", None, pm)
+    b = realization_matrix(arrays, r)
+    if mode == "dense":
+        return Mixer("dense", b, _dense_padded(b))
+    if mode == "matrix":
+        return Mixer("matrix", b)
+    raise ValueError(f"unknown scenario mixing mode {mode!r}")
+
+
+def freeze_dropped(alive: jax.Array, old_state: object, new_state: object) -> object:
+    """Revert dropped nodes' per-node state: a node offline for the step
+    computes nothing, so every floating leaf with a leading node axis is
+    restored bitwise from the pre-step state where `alive` is False.
+    Scalar counters and PRNG keys (integer dtypes) advance normally.
+    """
+    m = alive.shape[0]
+
+    def one(old, new):
+        if (
+            hasattr(new, "ndim")
+            and new.ndim >= 1
+            and new.shape[0] == m
+            and jnp.issubdtype(new.dtype, jnp.inexact)
+        ):
+            keep = alive.reshape((m,) + (1,) * (new.ndim - 1))
+            return jnp.where(keep, new, old)
+        return new
+
+    return jax.tree_util.tree_map(one, old_state, new_state)
+
+
+def expected_matrix(
+    topo: Topology,
+    scenario: Scenario,
+    num_samples: int = 256,
+    k_offset: int = 0,
+) -> np.ndarray:
+    """Empirical E[B^k] over `num_samples` realizations (float64 host array).
+
+    The spectral gap of this matrix lower-bounds the per-step consensus
+    contraction of the dynamic process (Jensen); the conformance suite
+    checks it against the measured contraction slope.
+    """
+    arrays = make_scenario_arrays(topo, scenario)
+    ks = jnp.arange(k_offset, k_offset + num_samples)
+    mats = jax.vmap(
+        lambda k: realization_matrix(arrays, realize(scenario, arrays, k))
+    )(ks)
+    return np.asarray(jnp.mean(mats, axis=0), dtype=np.float64)

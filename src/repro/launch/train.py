@@ -14,6 +14,12 @@ neighbor-exchange mixer by default (`--mixing dense` for the bit-compatible
 escape hatch), and per-step wire-cost accounting (Eq. 8 via the registry's
 `wire_bits`) logged alongside the loss.
 
+Dynamic-network scenarios (`--scenario flaky_links|churn|stragglers|harsh`
+or explicit `--churn/--straggler/--edge-drop` probabilities) realize a
+fresh doubly-stochastic mixing matrix every step inside the scan: links
+fail, nodes drop out (state frozen for the step), stragglers miss the
+exchange window, and only realized edges are charged on the wire.
+
 On a real TPU slice the same driver shards the node-stacked state over the
 (node, fsdp, model) logical mesh; on CPU (tests/examples) everything runs
 on one device.  Substrate exercised: synthetic non-IID corpus ->
@@ -23,6 +29,7 @@ metrics log + checkpointing.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -43,6 +50,7 @@ from repro.core.algorithms import (
     get_algorithm,
     list_algorithms,
 )
+from repro.core.scenarios import get_scenario, list_scenarios
 from repro.core.topology import build_topology
 from repro.data.synthetic import SyntheticTokens
 from repro.models.model import init_params, train_loss
@@ -62,6 +70,23 @@ def _hps_from_args(name: str, args):
         "beer": lambda: BeerHp(lr=args.lr),
         "anq_nids": lambda: AnqNidsHp(lr=args.lr),
     }[name]()
+
+
+def _scenario_from_args(args):
+    """Resolve the --scenario preset, with per-probability overrides."""
+    scen = get_scenario(args.scenario)
+    overrides = {
+        field: value
+        for field, value in (
+            ("churn", args.churn),
+            ("straggler", args.straggler),
+            ("edge_drop", args.edge_drop),
+        )
+        if value is not None
+    }
+    if overrides:
+        scen = dataclasses.replace(scen, name=f"{scen.name}+custom", **overrides)
+    return dataclasses.replace(scen, seed=args.seed)
 
 
 def build_everything(args):
@@ -96,6 +121,7 @@ def build_everything(args):
     bound = alg.bind(
         grad_fn, topo, _hps_from_args(args.algo, args),
         mixing=args.mixing, seed=args.seed,
+        scenario=_scenario_from_args(args),
     )
 
     params0 = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -120,6 +146,15 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--topology", default="erdos_renyi")
+    ap.add_argument("--scenario", default="static", choices=list(list_scenarios()),
+                    help="dynamic-network preset: per-step link churn, node "
+                         "dropout, stragglers (see repro.core.scenarios)")
+    ap.add_argument("--churn", type=float, default=None,
+                    help="override: P[node fully offline per step]")
+    ap.add_argument("--straggler", type=float, default=None,
+                    help="override: P[node misses the exchange per step]")
+    ap.add_argument("--edge-drop", type=float, default=None,
+                    help="override: P[link fails per step]")
     ap.add_argument("--chunk", type=int, default=16,
                     help="steps per scan dispatch (engine chunk length)")
     ap.add_argument("--lr", type=float, default=0.05, help="baseline step size")
@@ -139,10 +174,13 @@ def main() -> None:
 
     cfg, bound, state, make_batch, n_params = build_everything(args)
     wire_per_step = bound.wire_bits(n_params)
+    scen_tag = bound.scenario.name if bound.dynamic else "static"
     print(
         f"[train] algo={args.algo} mixing={args.mixing} nodes={args.nodes} "
+        f"scenario={scen_tag} "
         f"params={n_params/1e6:.2f}M wire_bits/step={wire_per_step:.3e} "
-        f"({wire_per_step/8e6:.2f} MB/step network-wide)",
+        f"({wire_per_step/8e6:.2f} MB/step network-wide"
+        f"{'; full graph — realized bits logged per step' if bound.dynamic else ''})",
         flush=True,
     )
 
@@ -157,7 +195,9 @@ def main() -> None:
             start = last
             print(f"[train] resumed from step {last}")
 
-    runner = engine.make_scan_runner(bound.step, chunk_size=args.chunk)
+    runner = engine.make_scan_runner(
+        bound.step, chunk_size=args.chunk, step_takes_index=bound.dynamic
+    )
     log_every = max(args.log_every or args.chunk, 1)
     t0 = time.time()
     k = start
@@ -167,12 +207,17 @@ def main() -> None:
         length = min(args.chunk, args.steps - k)
         k0 = k
         # copy_state=False: we rebind to the returned state, so the engine
-        # can donate our buffers without the per-chunk protective deep copy
+        # can donate our buffers without the per-chunk protective deep copy.
+        # k_start keeps batches and scenario realizations aligned with the
+        # *global* step index across chunk dispatches.
         state, metrics, info = runner(
-            state, lambda j: make_batch(k0 + j), length, copy_state=False
+            state, make_batch, length, copy_state=False, k_start=k0
         )
         k += info["steps_dispatched"]
-        cum_bits += wire_per_step * info["steps_dispatched"]
+        if "wire_bits" in metrics:  # realized (surviving-edge) accounting
+            cum_bits += float(np.sum(metrics["wire_bits"]))
+        else:
+            cum_bits += wire_per_step * info["steps_dispatched"]
         if (k // log_every) != (k0 // log_every) or k >= args.steps:
             loss = float(np.mean(metrics["loss_mean"]))
             extra = ""
@@ -180,6 +225,8 @@ def main() -> None:
                 extra += f" consensus={float(metrics['consensus'][-1]):.3e}"
             if "comm_nodes" in metrics:
                 extra += f" comm_nodes={int(metrics['comm_nodes'][-1])}"
+            if "alive_nodes" in metrics:
+                extra += f" alive={int(metrics['alive_nodes'][-1])}"
             if "sigma_mean" in metrics:
                 extra += f" sigma={float(metrics['sigma_mean'][-1]):.2f}"
             print(

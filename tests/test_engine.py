@@ -214,3 +214,40 @@ def test_engine_const_batch_detected_through_fresh_containers():
         np.asarray(outs["host"][0].params),
         rtol=1e-6, atol=1e-6,
     )
+
+
+def test_k_start_offsets_step_index_and_termination_window():
+    """run(..., k_start=) hands the global index to 3-arg steps, and the
+    std-termination guard counts steps into *this run*: a resumed run with
+    a tiny objective must still fill its 3-value window (3 steps), never
+    fire on the zero-padded warm-up after 1."""
+    from repro.core.engine import make_scan_runner
+
+    seen = []
+
+    def step_fn(state, batch, k):
+        seen.append(None)  # trace count, not per-step
+        return state + 0.0, {"loss_mean": jnp.zeros(()), "k": k}
+
+    runner = make_scan_runner(
+        step_fn,
+        objective_fn=lambda p: jnp.asarray(1e-3),  # constant, << 2.1*tol
+        params_of=lambda s: s,
+        tol_std=1e-2,
+        chunk_size=4,
+        donate=False,
+        step_takes_index=True,
+    )
+    state = jnp.zeros((4, 2))
+    _, metrics, info = runner(state, lambda k: None, 8, k_start=100)
+    # window fills at the 3rd step of the run and fires immediately (the
+    # objective is constant); firing after 1 step would mean the guard
+    # leaked the global index
+    assert info["steps_run"] == 3
+    np.testing.assert_array_equal(
+        np.asarray(metrics["k"]), np.arange(100, 103)
+    )
+    # fresh runner, no offset: same rule, same step count
+    _, metrics0, info0 = runner(state, lambda k: None, 8)
+    assert info0["steps_run"] == 3
+    np.testing.assert_array_equal(np.asarray(metrics0["k"]), np.arange(3))

@@ -66,3 +66,69 @@ def test_metropolis_always_doubly_stochastic(m):
 def test_disconnected_rejected():
     with pytest.raises((ValueError, RuntimeError)):
         build_topology("erdos_renyi", 10, p=0.0)
+
+
+def test_mixing_padded_star_hub_and_padding_slots():
+    """Degenerate inputs for mixing_padded: the star hub fills every
+    max_degree+1 slot (no padding at max degree); each leaf carries
+    max_degree-1 padding slots that repeat the row's own id with weight
+    exactly 0.0, and the scatter-reconstruction equals the dense B —
+    padding adds exactly zero to the diagonal."""
+    m = 9
+    topo = build_topology("star", m)
+    nbrs, w, is_self = topo.mixing_padded()
+    k = topo.max_degree + 1
+    assert nbrs.shape == w.shape == is_self.shape == (m, k)
+    assert k == m  # hub degree is m-1
+    # hub row: all slots live, none padded
+    assert len(set(nbrs[0].tolist())) == m
+    assert is_self[0].sum() == 1 and nbrs[0][is_self[0]][0] == 0
+    # leaf rows: exactly 2 live slots (hub + self); the rest is padding
+    for i in range(1, m):
+        live = w[i] != 0.0
+        assert live.sum() == 2
+        assert np.all(nbrs[i][~live] == i)
+        assert not is_self[i][~live].any()
+        assert np.all(w[i][~live] == 0.0)  # bitwise IEEE zero
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+    recon = np.zeros((m, m), np.float64)
+    for i in range(m):
+        for slot in range(k):
+            recon[i, nbrs[i, slot]] += w[i, slot]
+    np.testing.assert_allclose(recon, topo.mixing, atol=1e-6)
+
+
+def test_mixing_padded_m2_minimal():
+    """Smallest graph: m=2 single link -> 2 slots per row, B = [[.5,.5]]*2."""
+    topo = build_topology("ring", 2)
+    nbrs, w, is_self = topo.mixing_padded()
+    assert nbrs.shape == (2, 2)
+    assert is_self.sum(axis=1).tolist() == [1, 1]
+    np.testing.assert_allclose(w, 0.5, atol=1e-7)
+
+
+def test_mix_padded_padding_slots_contribute_exactly_zero():
+    """Poison check: redirect every padding slot's gather index at a
+    different node; because padding weights are exactly 0.0 the mixed
+    output must be bitwise unchanged — padded slots contribute exactly
+    zero weight."""
+    import jax.numpy as jnp
+
+    from repro.core.mixing import PaddedMixing, mix_padded
+
+    m = 7
+    topo = build_topology("star", m)
+    nbrs, w, is_self = topo.mixing_padded()
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.standard_normal((m, 4)), jnp.float32)}
+    pm = PaddedMixing(jnp.asarray(nbrs), jnp.asarray(w), jnp.asarray(is_self))
+    out = mix_padded(pm, tree)
+    padding = (w == 0.0) & ~is_self
+    poisoned = np.where(padding, (nbrs + 1) % m, nbrs)
+    pm_poison = PaddedMixing(
+        jnp.asarray(poisoned, np.int32), jnp.asarray(w), jnp.asarray(is_self)
+    )
+    out_poison = mix_padded(pm_poison, tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]), np.asarray(out_poison["w"])
+    )
