@@ -7,6 +7,7 @@
   baselines    — D-PSGD / DFedSAM / CHOCO-SGD / BEER / (AN)Q-NIDS
   algorithms   — unified registry binding all of the above to one contract
   scenarios    — dynamic networks: per-step link churn, dropout, stragglers
+  temporal     — Markov link/node processes + bounded-staleness gossip
   compression  — rand-k / top-k / QSGD / one-bit operators
   gossip       — mesh-sharded gossip (dense-masked + compressed payload)
 """
@@ -41,4 +42,9 @@ from repro.core.scenarios import (  # noqa: F401
     list_scenarios,
     make_scenario_arrays,
     realize,
+)
+from repro.core.temporal import (  # noqa: F401
+    TemporalScenario,
+    get_temporal_scenario,
+    list_temporal_scenarios,
 )

@@ -39,7 +39,7 @@ Extending::
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +49,13 @@ from repro.core import baselines as B
 from repro.core import engine
 from repro.core import pame as pame_mod
 from repro.core import scenarios as scen_mod
+from repro.core import temporal as temp_mod
 from repro.core.compression import qsgd, rand_k
-from repro.core.mixing import Mixer, make_mixer
+from repro.core.mixing import Mixer, make_mixer, ring_gather
 from repro.core.pme import message_bits
 from repro.core.topology import Topology
+
+AnyScenario = Union[scen_mod.Scenario, temp_mod.TemporalScenario]
 
 __all__ = [
     "Algorithm", "BoundAlgorithm", "AlgoContext",
@@ -146,7 +149,7 @@ class Algorithm:
         *,
         mixing: str = "sparse",
         seed: int = 0,
-        scenario: Optional[scen_mod.Scenario] = None,
+        scenario: Optional[AnyScenario] = None,
     ) -> "BoundAlgorithm":
         """Close the spec over (grad_fn, topology, hps, mixing, scenario).
 
@@ -155,7 +158,11 @@ class Algorithm:
         scenario wraps the step so each global step k realizes its own
         doubly-stochastic mixing matrix on device (see
         ``repro.core.scenarios``), freezes dropped nodes' state, and logs
-        realized per-step ``wire_bits``.
+        realized per-step ``wire_bits``.  A ``TemporalScenario``
+        (``repro.core.temporal``) additionally threads Markov link/node
+        state and the bounded-staleness snapshot ring through the
+        engine's auxiliary carry slot; its step signature grows to
+        ``step(state, batch, k, aux) -> (state, metrics, aux)``.
         """
         hps = self.hp_cls() if hps is None else hps
         if not isinstance(hps, self.hp_cls):
@@ -185,14 +192,19 @@ class BoundAlgorithm:
     When a dynamic scenario is bound, ``step`` instead takes ``(state,
     batch, k)`` — the global step index realizes the step's network — and
     the engine must be built with ``step_takes_index=True`` (``run`` /
-    ``make_runner`` do this automatically).
+    ``make_runner`` do this automatically).  A ``TemporalScenario`` bind
+    further extends the signature to ``step(state, batch, k, aux) ->
+    (state, metrics, aux)``, where ``aux`` is the ``TemporalCarry``
+    (Markov chain state + staleness ring) built by :meth:`aux_init` and
+    threaded through the engine's auxiliary carry slot
+    (``carries_aux=True``).
     """
 
     def __init__(
         self,
         spec: Algorithm,
         ctx: AlgoContext,
-        scenario: Optional[scen_mod.Scenario] = None,
+        scenario: Optional[AnyScenario] = None,
         scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
         mixing_mode: str = "sparse",
     ):
@@ -216,6 +228,13 @@ class BoundAlgorithm:
         return self.scenario is not None
 
     @property
+    def temporal(self) -> bool:
+        """True when the bound scenario is a TemporalScenario (step
+        threads the auxiliary carry — run/make_runner pass it to the
+        engine as ``carries_aux``)."""
+        return isinstance(self.scenario, temp_mod.TemporalScenario)
+
+    @property
     def params_of(self) -> Callable:
         return self.spec.params_of
 
@@ -225,8 +244,18 @@ class BoundAlgorithm:
             raise ValueError(f"{self.name} needs batch0 at init")
         return self.spec.init(key, params_stacked, self.ctx, batch0)
 
+    def aux_init(self, state: object) -> temp_mod.TemporalCarry:
+        """Initial auxiliary carry for a temporal bind: stationary Markov
+        draws + the staleness ring seeded with the initial parameters."""
+        if not self.temporal:
+            raise TypeError(f"{self.name} is not bound to a TemporalScenario")
+        return temp_mod.temporal_carry_init(
+            self.scenario, self.scen_arrays, self.spec.params_of(state)
+        )
+
     def step(self, state: object, batch: object,
-             k: Optional[jax.Array] = None) -> Tuple[object, dict]:
+             k: Optional[jax.Array] = None,
+             aux: Optional[temp_mod.TemporalCarry] = None):
         if not self.dynamic:
             return self.spec.step(state, batch, self.ctx)
         if k is None:
@@ -234,7 +263,33 @@ class BoundAlgorithm:
                 f"{self.name} is bound to scenario {self.scenario.name!r}: "
                 "step(state, batch, k) needs the global step index"
             )
+        if self.temporal:
+            if aux is None:
+                raise TypeError(
+                    f"{self.name} is bound to temporal scenario "
+                    f"{self.scenario.name!r}: step(state, batch, k, aux) "
+                    "needs the TemporalCarry (see aux_init)"
+                )
+            return self._temporal_step(state, batch,
+                                       jnp.asarray(k, jnp.int32), aux)
         return self._dynamic_step(state, batch, jnp.asarray(k, jnp.int32))
+
+    def _realized_metrics(self, r: scen_mod.Realization, state: object,
+                          metrics: dict) -> dict:
+        """Realized wire accounting shared by the i.i.d. and temporal paths:
+        algorithms without their own per-message metric are charged
+        edge_bits on every realized directed edge."""
+        if "wire_bits" not in metrics:
+            n = sum(
+                int(np.prod(leaf.shape[1:]))
+                for leaf in jax.tree_util.tree_leaves(self.spec.params_of(state))
+            )
+            eb = self.spec.edge_bits(self.ctx.hps, n) if self.spec.edge_bits else 0.0
+            metrics["wire_bits"] = (
+                r.directed_edges.astype(jnp.float32) * float(eb)
+            )
+        metrics["alive_nodes"] = jnp.sum(r.alive.astype(jnp.int32))
+        return metrics
 
     def _dynamic_step(self, state: object, batch: object,
                       k: jax.Array) -> Tuple[object, dict]:
@@ -252,17 +307,61 @@ class BoundAlgorithm:
         )
         new_state, metrics = self.spec.step(state, batch, ctx_t)
         new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
-        if "wire_bits" not in metrics:
-            n = sum(
-                int(np.prod(leaf.shape[1:]))
-                for leaf in jax.tree_util.tree_leaves(self.spec.params_of(state))
+        return new_state, self._realized_metrics(r, state, metrics)
+
+    def _temporal_step(self, state: object, batch: object, k: jax.Array,
+                       aux: temp_mod.TemporalCarry):
+        """One step under the bound TemporalScenario (fully traceable).
+
+        Advances the Markov chains from the carried state, realizes the
+        step's doubly-stochastic matrix with delayed stragglers still
+        participating, substitutes their ring-gathered t-delayed
+        parameters into the exchange (consistently: the whole step runs
+        on the substituted stack, so every public quantity derived from a
+        delayed node's parameters is the delayed version), and afterwards
+        re-adds each delayed node's private innovation (fresh − delayed)
+        to its own row — which restores the global parameter sum exactly,
+        for every realized matrix.  Requires the algorithm state to carry
+        its node-stacked parameters in a ``params`` field (all built-in
+        registrations do).
+        """
+        new_ts, r, delayed, tau = temp_mod.advance(
+            self.scenario, self.scen_arrays, aux.ts, k
+        )
+        mixer = scen_mod.scenario_mixer(self.scen_arrays, r, self._mixing_mode)
+        ctx_t = dataclasses.replace(
+            self.ctx, mixer=mixer,
+            extras={**self.ctx.extras, "realization": r},
+        )
+        d_max = self.scenario.staleness
+        ring = aux.ring
+        if d_max > 0:
+            fresh = self.spec.params_of(state)
+            slot = jnp.mod(k - tau, d_max)
+            eff = ring_gather(ring, fresh, slot, delayed)
+            state_in = state._replace(params=eff)
+        else:
+            state_in = state
+        new_state, metrics = self.spec.step(state_in, batch, ctx_t)
+        if d_max > 0:
+            def _readd(p, f, e):
+                keep = delayed.reshape((-1,) + (1,) * (p.ndim - 1))
+                return p + jnp.where(keep, f - e, jnp.zeros_like(p))
+
+            new_params = jax.tree_util.tree_map(
+                _readd, self.spec.params_of(new_state), fresh, eff
             )
-            eb = self.spec.edge_bits(self.ctx.hps, n) if self.spec.edge_bits else 0.0
-            metrics["wire_bits"] = (
-                r.directed_edges.astype(jnp.float32) * float(eb)
-            )
-        metrics["alive_nodes"] = jnp.sum(r.alive.astype(jnp.int32))
-        return new_state, metrics
+            new_state = new_state._replace(params=new_params)
+            ring = temp_mod.ring_push(ring, fresh, k, d_max)
+            tgrid = jnp.arange(d_max + 1, dtype=jnp.int32)
+            metrics["stale_hist"] = jnp.sum(
+                (tau[:, None] == tgrid[None, :]) & r.participating[:, None],
+                axis=0,
+            ).astype(jnp.float32)
+            metrics["stale_nodes"] = jnp.sum(delayed.astype(jnp.int32))
+        new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
+        metrics = self._realized_metrics(r, state, metrics)
+        return new_state, metrics, temp_mod.TemporalCarry(new_ts, ring)
 
     def wire_bits(self, n: int) -> float:
         """Expected bits on the wire per step, summed over the network."""
@@ -280,18 +379,26 @@ class BoundAlgorithm:
         runner = engine.make_scan_runner(
             self.step, objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, chunk_size=chunk_size,
-            step_takes_index=self.dynamic,
+            step_takes_index=self.dynamic, carries_aux=self.temporal,
         )
 
         def run(key, params0, m, batch_fn, num_steps):
             stacked = B.stack_params(params0, m)
             batch0 = batch_fn(0) if self.spec.needs_batch0 else None
             state = self.init(key, stacked, batch0)
-            state, metrics, info = runner(state, batch_fn, num_steps)
+            aux = self.aux_init(state) if self.temporal else None
+            state, metrics, info = runner(state, batch_fn, num_steps, aux=aux)
+            info = dict(info)
+            info.pop("aux", None)
             history = {
                 key_: [float(v) for v in vals]
                 for key_, vals in metrics.items()
+                if key_ != "stale_hist"
             }
+            if "stale_hist" in metrics:
+                history["staleness_hist"] = engine.staleness_hist(
+                    metrics["stale_hist"]
+                )
             history["loss"] = history.pop("loss_mean", [])
             history.update(info)
             self._account_wire(history, params0)
@@ -316,11 +423,13 @@ class BoundAlgorithm:
         stacked = B.stack_params(params0, m)
         batch0 = batch_fn(0) if self.spec.needs_batch0 else None
         state = self.init(key, stacked, batch0)
+        aux = self.aux_init(state) if self.temporal else None
         state, history = B.run_algorithm(
             self.step, state, batch_fn, num_steps,
             objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, driver=driver, chunk_size=chunk_size,
             step_takes_index=self.dynamic,
+            carries_aux=self.temporal, aux=aux,
         )
         self._account_wire(history, params0)
         return state, history

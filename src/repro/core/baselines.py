@@ -218,10 +218,15 @@ class BeerState(NamedTuple):
 def beer_init(
     key: jax.Array, params_stacked: object, batch0: object, grad_fn: GradFn
 ) -> BeerState:
+    # distinct buffers per state field: the scan engine donates the carry,
+    # and XLA rejects donating an aliased buffer twice (h/z and
+    # g/prev_grad share *values* at init, never storage)
     _, g0 = _node_grads(grad_fn, params_stacked, batch0, key)
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    g0_copy = jax.tree_util.tree_map(lambda x: x.copy(), g0)
     return BeerState(
-        params_stacked, zeros, g0, zeros, g0, jnp.zeros((), jnp.int32), key
+        params_stacked, zeros(), g0, zeros(), g0_copy,
+        jnp.zeros((), jnp.int32), key,
     )
 
 
@@ -266,21 +271,32 @@ def beer_step(
 # (AN)Q-NIDS — NIDS with (adaptively) quantized messages
 # --------------------------------------------------------------------------
 class NidsState(NamedTuple):
-    params: object       # x^k
-    prev_params: object  # x^{k-1}
-    prev_grad: object
-    hats: object         # \hat u — difference-encoded public message state
+    params: object  # x^k
+    c: object       # running sum of the adapt steps z^s, s < k (memory)
+    hat_z: object   # public surrogate of z (quantized innovations)
+    hat_c: object   # public surrogate of c (receiver-side accumulation)
     step: jax.Array
     key: jax.Array
 
 
 def nids_init(
-    key: jax.Array, params_stacked: object, batch0: object, grad_fn: GradFn, lr: float
+    key: jax.Array,
+    params_stacked: object,
+    batch0: object = None,
+    grad_fn: Optional[GradFn] = None,
+    lr: Optional[float] = None,
 ) -> NidsState:
-    _, g0 = _node_grads(grad_fn, params_stacked, batch0, key)
-    x1 = _axpy(-lr, g0, params_stacked)
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
-    return NidsState(x1, params_stacked, g0, zeros, jnp.ones((), jnp.int32), key)
+    """The drop-aware form needs no warm-up gradient: all memory starts at
+    zero.  ``batch0``/``grad_fn``/``lr`` are accepted (and ignored) for
+    signature compatibility with the pre-rewrite initializer."""
+    del batch0, grad_fn, lr
+    # distinct zero buffers per field — the donated scan carry must not
+    # alias storage across leaves (see beer_init)
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    return NidsState(
+        params_stacked, zeros(), zeros(), zeros(),
+        jnp.zeros((), jnp.int32), key,
+    )
 
 
 def nids_step(
@@ -291,32 +307,58 @@ def nids_step(
     lr: float,
     comp: Optional[Compressor] = None,
 ) -> Tuple[NidsState, dict]:
-    r"""x^{k+1} = Atilde(2x^k - x^{k-1} - lr (grad^k - grad^{k-1})),
-    Atilde = (I + B)/2.
+    r"""Drop-aware NIDS (exact-diffusion family), Atilde = (I + B)/2:
+
+        z^k     = x^k - lr grad^k                       (adapt)
+        x^{k+1} = z^k + (Atilde - I)(2 z^k + c^k)       (correct + combine)
+        c^{k+1} = c^k + z^k                             (memory)
+
+    On a static graph this has the same linear-system eigenstructure as
+    the textbook ``x^{k+1} = Atilde(2x^k - x^{k-1} - lr (g^k - g^{k-1}))``
+    recursion (per Atilde-eigenmode lambda, both contract at sqrt(lambda)),
+    but every *memory* term is routed through (Atilde - I) — whose column
+    sums over any step's surviving subgraph are exactly zero.  That is the
+    drop-aware correction: on time-varying graphs the 2x - x_prev form
+    re-injects the pending displacement of nodes that skip a round and
+    provably loses the global mean, while this form preserves it for every
+    realized doubly-stochastic matrix (see tests/test_invariants.py, which
+    now pins NIDS mean preservation under churn instead of xfailing it).
 
     With comp != None this is the (AN)Q-NIDS variant: nodes transmit the
-    quantized *innovation* q = Q(u - \hat u) and both ends update the public
-    surrogate \hat u += q.  Because u^k converges, the innovation (and thus
-    the quantization error) vanishes — the paper's "adaptive" finite-bit
-    quantization, emulated with difference encoding.
+    quantized *innovation* q = Q(z - hat_z) and both ends update the
+    public surrogates (hat_z += q, hat_c += hat_z); only off-diagonal
+    traffic is lossy, each node mixes its own exact copy on the diagonal.
+    Because z^k converges, innovations (and the quantization error)
+    vanish — the paper's "adaptive" finite-bit quantization, emulated
+    with difference encoding.
+
+    ``c`` accumulates a consensus component that (Atilde - I) annihilates
+    exactly in real arithmetic; over very long runs (>> 10^4 steps) its
+    growth puts an fp32 cancellation floor under the correction term.
     """
     key = jax.random.fold_in(state.key, state.step)
     mx = as_mixer(b)
     losses, grad_k = _node_grads(grad_fn, state.params, batch, key)
-    u = jax.tree_util.tree_map(
-        lambda x, xp, g, gp: 2.0 * x - xp - lr * (g - gp),
-        state.params, state.prev_params, grad_k, state.prev_grad,
-    )
+    z = _axpy(-lr, grad_k, state.params)
+    v = jax.tree_util.tree_map(lambda zz, cc: 2.0 * zz + cc, z, state.c)
     if comp is not None:
-        q = _compress_tree(comp, jax.random.fold_in(key, 11), _sub(u, state.hats))
-        hats = _add(state.hats, q)
-        # node keeps its own exact copy; only off-diagonal mixing is lossy
-        mixed = mx.mix_nids_quantized(hats, u)
+        q = _compress_tree(comp, jax.random.fold_in(key, 11), _sub(z, state.hat_z))
+        hat_z = _add(state.hat_z, q)
+        hat_c = _add(state.hat_c, hat_z)
+        hat_v = jax.tree_util.tree_map(
+            lambda hz, hc: 2.0 * hz + hc, hat_z, state.hat_c
+        )
+        # (Atilde - I) v with lossy off-diagonal traffic and each node's
+        # own exact v on the diagonal: off(A~)·hat_v + (diag(A~) - 1)·v
+        corr = _sub(mx.mix_nids_quantized(hat_v, v), v)
     else:
-        hats = state.hats
-        mixed = mx.mix_half(u)
+        hat_z, hat_c = state.hat_z, state.hat_c
+        # (Atilde - I) v = (B - I) v / 2
+        corr = jax.tree_util.tree_map(lambda l: 0.5 * l, mx.mix_lazy(v))
+    x_new = _add(z, corr)
+    c_new = _add(state.c, z)
     return (
-        NidsState(mixed, state.params, grad_k, hats, state.step + 1, state.key),
+        NidsState(x_new, c_new, hat_z, hat_c, state.step + 1, state.key),
         {"loss_mean": jnp.mean(losses)},
     )
 
@@ -335,6 +377,8 @@ def run_algorithm(
     driver: str = "scan",
     chunk_size: int = engine.DEFAULT_CHUNK_SIZE,
     step_takes_index: bool = False,
+    carries_aux: bool = False,
+    aux: object = None,
 ) -> Tuple[object, dict]:
     """Race driver shared by every baseline.
 
@@ -345,38 +389,55 @@ def run_algorithm(
     `step_takes_index=True` feeds the global step index as a third step
     argument (dynamic-network scenario steps) on both drivers; their
     realized per-step "wire_bits" metric joins the history when emitted.
+    `carries_aux=True` threads the auxiliary carry (temporal Markov state
+    + staleness ring) through both drivers; the step then returns
+    ``(state, metrics, aux)`` and per-step ``stale_hist`` vectors are
+    summed into a run-level ``staleness_hist``.
     """
+    import numpy as np
+
     if driver == "scan":
         state, metrics, info = engine.run_scan_loop(
             step_fn, state, batch_fn, num_steps,
             objective_fn=objective_fn, params_of=params_of,
             tol_std=tol_std, chunk_size=chunk_size,
             step_takes_index=step_takes_index,
+            carries_aux=carries_aux, aux=aux,
         )
         history = engine.history_from(
             metrics, info,
             {"loss": "loss_mean", "objective": "objective",
-             "wire_bits": "wire_bits", "alive_nodes": "alive_nodes"},
+             "wire_bits": "wire_bits", "alive_nodes": "alive_nodes",
+             "stale_nodes": "stale_nodes"},
         )
-        for key in ("wire_bits", "alive_nodes"):
+        for key in ("wire_bits", "alive_nodes", "stale_nodes"):
             if not history[key]:  # static runs keep the legacy schema
                 history.pop(key)
+        if "stale_hist" in metrics:
+            history["staleness_hist"] = engine.staleness_hist(
+                metrics["stale_hist"]
+            )
         return state, history
     if driver != "host":
         raise ValueError(f"unknown driver {driver!r}")
-    import numpy as np
 
     step = jax.jit(step_fn)
     history = {"loss": [], "objective": []}
+    hist_rows: list = []
     f_window: list = []
     for k in range(num_steps):
+        step_args = (state, batch_fn(k))
         if step_takes_index:
-            state, metrics = step(state, batch_fn(k), jnp.asarray(k, jnp.int32))
+            step_args += (jnp.asarray(k, jnp.int32),)
+        if carries_aux:
+            state, metrics, aux = step(*step_args, aux)
         else:
-            state, metrics = step(state, batch_fn(k))
-        for key in ("wire_bits", "alive_nodes"):
+            state, metrics = step(*step_args)
+        for key in ("wire_bits", "alive_nodes", "stale_nodes"):
             if key in metrics:
                 history.setdefault(key, []).append(float(metrics[key]))
+        if "stale_hist" in metrics:
+            hist_rows.append(np.asarray(metrics["stale_hist"]))
         history["loss"].append(float(metrics["loss_mean"]))
         if objective_fn is not None:
             mean_params = jax.tree_util.tree_map(
@@ -387,6 +448,8 @@ def run_algorithm(
             f_window.append(fval)
             if len(f_window) >= 3 and float(np.std(f_window[-3:])) < tol_std:
                 break
+    if hist_rows:
+        history["staleness_hist"] = engine.staleness_hist(hist_rows)
     history["steps_run"] = len(history["loss"])
     # same schema as the scan driver; the host loop never over-dispatches
     history["steps_dispatched"] = history["steps_run"]

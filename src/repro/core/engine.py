@@ -39,7 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["make_scan_runner", "run_scan_loop", "history_from"]
+__all__ = [
+    "make_scan_runner", "run_scan_loop", "history_from", "staleness_hist",
+]
 
 DEFAULT_CHUNK_SIZE = 32
 
@@ -59,10 +61,20 @@ def history_from(metrics: dict, info: dict, keys: dict) -> dict:
     return history
 
 
+def staleness_hist(rows) -> list:
+    """Collapse per-step ``stale_hist`` rows ([steps, D+1] or an iterable
+    of [D+1] rows) into the run-level staleness histogram — the one
+    schema every driver (scan, host, training CLI) logs."""
+    return [float(v) for v in np.sum(np.asarray(rows), axis=0)]
+
+
 class _Carry(NamedTuple):
     state: object      # algorithm state pytree (donated across chunks)
     done: jax.Array    # bool scalar — termination rule has fired
     win: jax.Array     # [3] f32 rolling window of objective values
+    aux: object = None  # auxiliary user carry (e.g. temporal-process state
+    #                     + staleness ring) — threads through the scan with
+    #                     the state, frozen by the same termination select
 
 
 def _tree_select(pred: jax.Array, on_true: object, on_false: object) -> object:
@@ -80,6 +92,7 @@ def make_scan_runner(
     chunk_size: int = DEFAULT_CHUNK_SIZE,
     donate: bool = True,
     step_takes_index: bool = False,
+    carries_aux: bool = False,
 ) -> Callable[..., Tuple[object, dict, dict]]:
     """Build a reusable chunked-scan driver.
 
@@ -100,13 +113,26 @@ def make_scan_runner(
     callers that drive chunks manually (e.g. the training CLI), so
     realizations stay aligned with the global step across runner calls.
     The default (False) leaves the traced program unchanged.
+
+    ``carries_aux=True`` adds an auxiliary user-carry slot: ``run(...,
+    aux=aux0)`` seeds it, the step is called as ``step_fn(state, batch,
+    [k,] aux)`` and must return ``(new_state, metrics, new_aux)``, and the
+    final aux comes back in ``info["aux"]``.  The aux pytree lives in the
+    scan carry next to the algorithm state — temporal-process Markov state
+    and the bounded-staleness parameter ring ride it across steps with no
+    host round-trips — and is frozen by the same termination select as the
+    state.
     """
 
     def _scan_body(carry: _Carry, k: jax.Array, k_rel: jax.Array, batch: object):
+        step_args = (carry.state, batch)
         if step_takes_index:
-            new_state, metrics = step_fn(carry.state, batch, k)
+            step_args += (k,)
+        if carries_aux:
+            new_state, metrics, new_aux = step_fn(*step_args, carry.aux)
         else:
-            new_state, metrics = step_fn(carry.state, batch)
+            new_state, metrics = step_fn(*step_args)
+            new_aux = carry.aux
         if objective_fn is not None:
             mean_params = jax.tree_util.tree_map(
                 lambda x: x.mean(axis=0), params_of(new_state)
@@ -125,13 +151,14 @@ def make_scan_runner(
         # state so the returned state is exactly the triggering step's.
         frozen = carry.done
         out_state = _tree_select(frozen, carry.state, new_state)
+        out_aux = _tree_select(frozen, carry.aux, new_aux)
         out_win = jnp.where(frozen, carry.win, win)
         done = carry.done | trigger
         ys = dict(metrics)
         if obj is not None:
             ys["objective"] = obj
         ys["_stopped"] = done
-        return _Carry(out_state, done, out_win), ys
+        return _Carry(out_state, done, out_win, out_aux), ys
 
     compiled: dict = {}  # (length, const_batch) -> jitted chunk fn
 
@@ -160,20 +187,25 @@ def make_scan_runner(
         *,
         copy_state: bool = True,
         k_start: int = 0,
+        aux: object = None,
     ) -> Tuple[object, dict, dict]:
+        if carries_aux and aux is None:
+            raise ValueError("carries_aux runner needs run(..., aux=aux0)")
         if donate and copy_state:
             # The first chunk donates the carry's buffers; copy so the
             # caller's initial state (often shared across runs) survives.
             # Callers that hand over ownership (e.g. a training loop that
             # immediately rebinds to the returned state) pass
             # copy_state=False and skip the deep copy.
-            state = jax.tree_util.tree_map(
-                lambda x: x.copy() if isinstance(x, jax.Array) else x, state
+            state, aux = jax.tree_util.tree_map(
+                lambda x: x.copy() if isinstance(x, jax.Array) else x,
+                (state, aux),
             )
         carry = _Carry(
             state=state,
             done=jnp.zeros((), bool),
             win=jnp.zeros((3,), jnp.float32),
+            aux=aux,
         )
         leaves0, treedef0 = None, None
 
@@ -215,7 +247,9 @@ def make_scan_runner(
             if objective_fn is not None and bool(jax.device_get(carry.done)):
                 break
         if not ys_chunks:
-            return carry.state, {}, {"steps_run": 0, "steps_dispatched": 0}
+            return carry.state, {}, {
+                "steps_run": 0, "steps_dispatched": 0, "aux": carry.aux,
+            }
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs), *ys_chunks
         )
@@ -228,6 +262,7 @@ def make_scan_runner(
         return carry.state, metrics, {
             "steps_run": steps_run,
             "steps_dispatched": k0 - k_start,
+            "aux": carry.aux,
         }
 
     return run
@@ -245,6 +280,8 @@ def run_scan_loop(
     chunk_size: int = DEFAULT_CHUNK_SIZE,
     donate: bool = True,
     step_takes_index: bool = False,
+    carries_aux: bool = False,
+    aux: object = None,
 ) -> Tuple[object, dict, dict]:
     """One-shot convenience wrapper over `make_scan_runner`."""
     runner = make_scan_runner(
@@ -255,5 +292,6 @@ def run_scan_loop(
         chunk_size=chunk_size,
         donate=donate,
         step_takes_index=step_takes_index,
+        carries_aux=carries_aux,
     )
-    return runner(state, batch_fn, num_steps)
+    return runner(state, batch_fn, num_steps, aux=aux)

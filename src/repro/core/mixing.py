@@ -35,7 +35,10 @@ from typing import NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PaddedMixing", "Mixer", "mix_padded", "make_mixer", "as_mixer"]
+__all__ = [
+    "PaddedMixing", "Mixer", "mix_padded", "make_mixer", "as_mixer",
+    "ring_gather",
+]
 
 # Above this many slots the per-slot python unroll is replaced by a
 # lax.scan (compile-time guard for the full-connectivity "dense" mode at
@@ -107,6 +110,32 @@ def mix_padded(pm: PaddedMixing, tree: object) -> object:
     the padding, so sparse and full-connectivity padded forms agree bitwise.
     """
     return jax.tree_util.tree_map(lambda x: _leaf_mix_padded(pm, x), tree)
+
+
+def ring_gather(
+    ring: object,        # pytree, leaves [D, m, ...] — snapshot ring buffer
+    fresh: object,       # pytree, leaves [m, ...] — this step's live values
+    slot: jax.Array,     # [m] i32 — ring slot holding each node's snapshot
+    use_ring: jax.Array  # [m] bool — gather from the ring instead of fresh
+) -> object:
+    """Per-sender delayed gather: node j's effective value is its ring
+    snapshot ``ring[slot[j], j]`` where ``use_ring[j]``, else ``fresh[j]``.
+
+    This is how bounded-staleness gossip reads t-delayed parameters out of
+    the scan-carried snapshot ring: the substituted tree then flows
+    through the ordinary padded mixing (`mix_padded`/`Mixer`), so every
+    receiver of a delayed node consistently mixes the same delayed copy —
+    the property the mean-preservation argument needs.  All indices are
+    per-node gathers (O(m·n)); the ring never leaves the device.
+    """
+    m = slot.shape[0]
+    node = jnp.arange(m, dtype=jnp.int32)
+
+    def one(r, f):
+        keep = use_ring.reshape((m,) + (1,) * (f.ndim - 1))
+        return jnp.where(keep, r[slot, node], f)
+
+    return jax.tree_util.tree_map(one, ring, fresh)
 
 
 def _dense_padded(bmat: jax.Array) -> PaddedMixing:

@@ -75,6 +75,7 @@ __all__ = [
     "get_scenario",
     "list_scenarios",
     "make_scenario_arrays",
+    "edge_uniform",
     "realize",
     "realization_from_masks",
     "realization_matrix",
@@ -219,12 +220,46 @@ def realization_from_masks(
     )
 
 
+def edge_uniform(key: jax.Array, nbrs: jax.Array) -> jax.Array:
+    """One uniform draw per *undirected* base link, shaped like the padded
+    neighbor table [m, d].
+
+    Each slot's key is folded with the canonical (lo, hi) edge id, so both
+    directions of a link read the same draw and any mask derived from it
+    stays symmetric — without ever materializing the O(m²) uniform matrix
+    the old scheme drew (only O(m·max_degree) counter-mode hashes).
+    Padding slots (nbrs[i, slot] == i) get the self-pair draw, which every
+    caller masks out with `valid`.
+    """
+    m, d = nbrs.shape
+    row = jnp.arange(m, dtype=nbrs.dtype)[:, None]
+    lo = jnp.minimum(row, nbrs)
+    hi = jnp.maximum(row, nbrs)
+    if m < (1 << 16):
+        # row-major pair id fits uint32: one hash per slot
+        edge_id = lo.astype(jnp.uint32) * jnp.uint32(m) + hi.astype(jnp.uint32)
+        keys = jax.vmap(lambda e: jax.random.fold_in(key, e))(
+            edge_id.reshape(-1)
+        )
+    else:
+        # lo*m + hi would wrap modulo 2^32 and alias distinct links onto
+        # one draw; nested folds cost a second hash but never collide
+        keys = jax.vmap(
+            lambda l, h: jax.random.fold_in(jax.random.fold_in(key, l), h)
+        )(lo.reshape(-1), hi.reshape(-1))
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, ()))(keys)
+    return u.reshape(m, d)
+
+
 def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realization:
     """Sample step k's network realization (traceable; `k` may be traced).
 
-    Edge survival is drawn once per *undirected* link: the uniform draw for
-    the pair (i, j) is read at (min, max), so both directions agree and
-    the realized adjacency stays symmetric.
+    Edge survival is drawn once per *undirected* link via `edge_uniform`
+    (per-edge folded keys over the padded table), so both directions agree
+    and the realized adjacency stays symmetric.  Note: this per-edge
+    counter-mode draw replaced the original O(m²) uniform matrix; realized
+    masks for a given seed differ from the pre-fold goldens, and every
+    conformance test recomputes its expectation from this same path.
     """
     m, d = arrays.nbrs.shape
     kk = jax.random.fold_in(arrays.key, k)
@@ -238,11 +273,7 @@ def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realiza
         straggler = jax.random.bernoulli(k_strag, scenario.straggler, (m,))
     edge_up = jnp.ones((m, d), bool)
     if scenario.edge_drop > 0.0:
-        u = jax.random.uniform(k_edge, (m, m))
-        row = jnp.arange(m, dtype=arrays.nbrs.dtype)[:, None]
-        lo = jnp.minimum(row, arrays.nbrs)
-        hi = jnp.maximum(row, arrays.nbrs)
-        edge_up = u[lo, hi] >= scenario.edge_drop
+        edge_up = edge_uniform(k_edge, arrays.nbrs) >= scenario.edge_drop
     return realization_from_masks(arrays, edge_up, alive, straggler)
 
 

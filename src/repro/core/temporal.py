@@ -1,0 +1,322 @@
+"""Temporal-dynamics subsystem: Markov network processes + bounded staleness.
+
+`repro.core.scenarios` draws link failures, churn, and stragglers i.i.d.
+per step, and a straggler loses the whole round.  Real decentralized
+networks are *bursty* (a bad link stays bad for a while), *sessioned* (a
+node that leaves stays gone for a geometric holding time), and *late
+rather than absent* (a slow node's messages arrive delayed, not never).
+This module replaces the i.i.d. draws with device-side Markov processes
+whose state rides the scan carry, and adds a bounded-staleness exchange
+mode in which a straggling node keeps participating in the realized
+doubly-stochastic matrix through its t-delayed parameters, gathered from
+a ring buffer of the last D parameter snapshots that also lives in the
+carry:
+
+  * `TemporalScenario` — the spec: Gilbert–Elliott two-state burst
+    process per base edge (good→bad w.p. `burst_down`, bad→good w.p.
+    `burst_up`), geometric node sessions (up→down w.p. `leave`, down→up
+    w.p. `rejoin`), optional mobility-style resampling of the active edge
+    subset every `resample_every` steps, an i.i.d. straggler draw, and
+    the staleness bound D (`staleness`).
+  * `TemporalState` — the per-edge/per-node Markov state + consecutive-
+    straggle ages; a pure pytree of device arrays, threaded through the
+    engine's auxiliary carry slot (no host round-trips per step).
+  * `advance` — one traceable transition: advance the chains from the
+    step-folded key, then build the step's `scenarios.Realization` with
+    Metropolis–Hastings weights over the surviving subgraph.  Delayed
+    stragglers (age ≤ D) *participate*; only churned nodes and stragglers
+    past the bound self-loop.
+  * `ring_init` / `ring_push` — the staleness ring: leaves [D, m, ...];
+    slot k mod D holds the parameters at the start of step k, so a node
+    delayed by tau ∈ [1, D] is read at slot (k − tau) mod D
+    (`repro.core.mixing.ring_gather`).
+
+Mean preservation under staleness is by construction: the delayed copy of
+node j is substituted consistently everywhere j's public value is used
+(the algorithm step runs on the substituted parameter stack), the
+realized matrix is doubly stochastic over the participants, and each
+delayed node re-adds its private innovation (fresh − delayed params) to
+its own row afterwards — so the per-leaf global parameter sum is exactly
+the no-staleness one for every mean-preserving algorithm in the registry
+(`repro.core.algorithms.BoundAlgorithm._temporal_step`).
+
+Degenerate-parameter reductions (used by the conformance suite): with
+`burst_up = 1 − burst_down` and `rejoin = 1 − leave` the chains forget
+their state and every mask equals the i.i.d. `Scenario` draw *bitwise*
+(same key folds, same uniform regions); with `staleness = 0` stragglers
+are excluded exactly as on the i.i.d. path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenarios import (
+    Realization,
+    ScenarioArrays,
+    edge_uniform,
+    realization_from_masks,
+)
+
+__all__ = [
+    "TemporalScenario",
+    "TemporalState",
+    "TemporalCarry",
+    "TEMPORAL_PRESETS",
+    "get_temporal_scenario",
+    "list_temporal_scenarios",
+    "temporal_state_init",
+    "temporal_carry_init",
+    "advance",
+    "ring_init",
+    "ring_push",
+]
+
+# init-key folds — outside any reachable step index, so the stationary
+# initial draws never collide with the per-step fold_in(key, k) stream
+_INIT_EDGE_FOLD = 0x7FFFFFFF
+_INIT_NODE_FOLD = 0x7FFFFFFE
+_MOBILITY_FOLD = 0x7FFFFFFD
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalScenario:
+    """Markov network dynamics + bounded-staleness exchange.
+
+    All rates are python floats baked into the traced step; the per-step
+    transition draws are device-side, keyed on fold_in(key, step) with the
+    same (edge, node, straggler) key split as the i.i.d. `Scenario` path.
+    """
+
+    name: str = "temporal"
+    # Gilbert–Elliott per-edge burst process (undirected links)
+    burst_down: float = 0.0   # P[good -> bad] per step
+    burst_up: float = 0.5     # P[bad -> good] per step (burst recovery)
+    # geometric node sessions
+    leave: float = 0.0        # P[up -> down] per step
+    rejoin: float = 0.5       # P[down -> up] per step
+    # mobility-style resampling of the active edge subset
+    resample_every: int = 0   # redraw epoch length in steps; 0 = off
+    mobility_keep: float = 1.0  # P[base edge active within an epoch]
+    # stragglers + bounded staleness
+    straggler: float = 0.0    # i.i.d. P[node is late this step]
+    staleness: int = 0        # D: max delay mixed from the ring; 0 = the
+    #                           i.i.d. semantics (late nodes excluded)
+    seed: int = 0
+
+    def __post_init__(self):
+        for field in ("burst_down", "burst_up", "leave", "rejoin",
+                      "mobility_keep", "straggler"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field}={v} must be a probability in [0, 1]")
+        if self.staleness < 0:
+            raise ValueError(f"staleness={self.staleness} must be >= 0")
+        if self.resample_every < 0:
+            raise ValueError(
+                f"resample_every={self.resample_every} must be >= 0"
+            )
+        if self.burst_down > 0.0 and self.burst_up == 0.0:
+            raise ValueError("burst_up=0 would make bad links permanent")
+        if self.leave > 0.0 and self.rejoin == 0.0:
+            raise ValueError("rejoin=0 would make departures permanent")
+
+    @property
+    def is_static(self) -> bool:
+        """True iff every step realizes the base graph exactly."""
+        return (
+            self.burst_down == self.leave == self.straggler == 0.0
+            and (self.resample_every == 0 or self.mobility_keep == 1.0)
+        )
+
+    @property
+    def mobile(self) -> bool:
+        return self.resample_every > 0 and self.mobility_keep < 1.0
+
+    @property
+    def stationary_bad(self) -> float:
+        """Stationary P[edge bad] of the Gilbert–Elliott chain."""
+        denom = self.burst_down + self.burst_up
+        return self.burst_down / denom if denom > 0.0 else 0.0
+
+    @property
+    def stationary_down(self) -> float:
+        """Stationary P[node down] of the session chain."""
+        denom = self.leave + self.rejoin
+        return self.leave / denom if denom > 0.0 else 0.0
+
+    @property
+    def mean_burst_len(self) -> float:
+        """Expected bad-burst length (geometric with rate burst_up)."""
+        return 1.0 / self.burst_up if self.burst_down > 0.0 else 0.0
+
+    @property
+    def mean_session_len(self) -> float:
+        """Expected up-session length (geometric with rate leave)."""
+        return 1.0 / self.leave if self.leave > 0.0 else float("inf")
+
+
+TEMPORAL_PRESETS = {
+    # mean bad burst of 4 steps, ~17% of links down in stationarity
+    "bursty_links": TemporalScenario(
+        name="bursty_links", burst_down=0.05, burst_up=0.25),
+    # mean session 33 steps up / 5 steps down, ~13% of nodes out
+    "sessions": TemporalScenario(name="sessions", leave=0.03, rejoin=0.2),
+    # redraw 60% of the base edges every 25 steps (mobility epochs)
+    "mobile": TemporalScenario(
+        name="mobile", resample_every=25, mobility_keep=0.6),
+    # 40% of nodes late each step, mixed at up to 3 steps of delay
+    "stale_stragglers": TemporalScenario(
+        name="stale_stragglers", straggler=0.4, staleness=3),
+    "markov_harsh": TemporalScenario(
+        name="markov_harsh", burst_down=0.08, burst_up=0.3,
+        leave=0.05, rejoin=0.3, straggler=0.3, staleness=2),
+}
+
+
+def get_temporal_scenario(name: str) -> TemporalScenario:
+    if name not in TEMPORAL_PRESETS:
+        raise ValueError(
+            f"unknown temporal scenario {name!r}; "
+            f"pick from {sorted(TEMPORAL_PRESETS)}"
+        )
+    return TEMPORAL_PRESETS[name]
+
+
+def list_temporal_scenarios() -> Tuple[str, ...]:
+    return tuple(TEMPORAL_PRESETS)
+
+
+class TemporalState(NamedTuple):
+    """Markov state carried through the scan (one step behind `advance`)."""
+
+    edge_bad: jax.Array  # [m, d] bool — Gilbert–Elliott bad state per slot
+    node_down: jax.Array  # [m] bool — session chain down state
+    age: jax.Array        # [m] i32 — consecutive straggle count
+
+
+class TemporalCarry(NamedTuple):
+    """What rides the engine's auxiliary carry slot for a temporal run:
+    the Markov chain state plus the staleness snapshot ring (None when
+    staleness is off, which keeps the ring-free traced program)."""
+
+    ts: TemporalState
+    ring: Optional[object]
+
+
+def temporal_carry_init(
+    scenario: TemporalScenario,
+    arrays: ScenarioArrays,
+    params_stacked: object,
+) -> TemporalCarry:
+    return TemporalCarry(
+        ts=temporal_state_init(scenario, arrays),
+        ring=ring_init(params_stacked, scenario.staleness),
+    )
+
+
+def temporal_state_init(
+    scenario: TemporalScenario, arrays: ScenarioArrays
+) -> TemporalState:
+    """Stationary initial draw, keyed outside the per-step fold stream, so
+    empirical occupancy matches the stationary law from step 0 (the
+    conformance suite checks this without a burn-in window)."""
+    m, d = arrays.nbrs.shape
+    edge_bad = jnp.zeros((m, d), bool)
+    if scenario.burst_down > 0.0:
+        u = edge_uniform(
+            jax.random.fold_in(arrays.key, _INIT_EDGE_FOLD), arrays.nbrs
+        )
+        edge_bad = u < scenario.stationary_bad
+    node_down = jnp.zeros((m,), bool)
+    if scenario.leave > 0.0:
+        u = jax.random.uniform(
+            jax.random.fold_in(arrays.key, _INIT_NODE_FOLD), (m,)
+        )
+        node_down = u < scenario.stationary_down
+    return TemporalState(edge_bad, node_down, jnp.zeros((m,), jnp.int32))
+
+
+def advance(
+    scenario: TemporalScenario,
+    arrays: ScenarioArrays,
+    ts: TemporalState,
+    k: jax.Array,
+) -> Tuple[TemporalState, Realization, jax.Array, jax.Array]:
+    """One traceable temporal transition + realization for step ``k``.
+
+    Returns ``(new_state, realization, delayed, tau)`` where ``delayed``
+    [m] marks nodes participating through their ring snapshot this step
+    and ``tau`` [m] is each node's current delay (0 for fresh nodes).
+    The per-step key split mirrors `scenarios.realize` exactly, and each
+    chain's transition reads a single uniform region per state, so the
+    degenerate parameters (burst_up = 1 − burst_down, rejoin = 1 − leave)
+    reproduce the i.i.d. draws bitwise.
+    """
+    m, d = arrays.nbrs.shape
+    kk = jax.random.fold_in(arrays.key, k)
+    k_edge, k_node, k_strag = jax.random.split(kk, 3)
+
+    edge_bad = ts.edge_bad
+    if scenario.burst_down > 0.0:
+        u = edge_uniform(k_edge, arrays.nbrs)
+        edge_bad = jnp.where(
+            ts.edge_bad, u < 1.0 - scenario.burst_up, u < scenario.burst_down
+        )
+    node_down = ts.node_down
+    if scenario.leave > 0.0:
+        u = jax.random.uniform(k_node, (m,))
+        node_down = jnp.where(
+            ts.node_down, u < 1.0 - scenario.rejoin, u < scenario.leave
+        )
+    straggler = jnp.zeros((m,), bool)
+    if scenario.straggler > 0.0:
+        straggler = jax.random.bernoulli(k_strag, scenario.straggler, (m,))
+
+    edge_up = ~edge_bad
+    if scenario.mobile:
+        epoch = k // scenario.resample_every
+        k_mob = jax.random.fold_in(
+            jax.random.fold_in(arrays.key, _MOBILITY_FOLD), epoch
+        )
+        edge_up = edge_up & (
+            edge_uniform(k_mob, arrays.nbrs) < scenario.mobility_keep
+        )
+
+    alive = ~node_down
+    age = jnp.where(straggler, ts.age + 1, 0)
+    if scenario.staleness > 0:
+        delayed = straggler & alive & (age <= scenario.staleness)
+    else:
+        delayed = jnp.zeros((m,), bool)
+    excluded = straggler & ~delayed
+    realization = realization_from_masks(arrays, edge_up, alive, excluded)
+    tau = jnp.where(delayed, age, 0)
+    return TemporalState(edge_bad, node_down, age), realization, delayed, tau
+
+
+def ring_init(params_stacked: object, staleness: int) -> Optional[object]:
+    """[D, m, ...] snapshot ring seeded with the initial parameters (a node
+    delayed at step k < tau reads the initial point, the correct t=0
+    truncation).  None when staleness is off — the carry stays unchanged
+    and the traced program is exactly the ring-free one."""
+    if staleness <= 0:
+        return None
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (staleness,) + x.shape).copy(),
+        params_stacked,
+    )
+
+
+def ring_push(ring: object, params_stacked: object, k: jax.Array,
+              staleness: int) -> object:
+    """Write the parameters at the start of step ``k`` into slot k mod D
+    (done *after* the step's reads: slot (k − tau) mod D still held
+    x^{k−tau} for every tau ≤ D while step k was realized)."""
+    slot = jnp.mod(k, staleness)
+    return jax.tree_util.tree_map(
+        lambda r, x: r.at[slot].set(x), ring, params_stacked
+    )

@@ -51,6 +51,7 @@ from repro.core.algorithms import (
     list_algorithms,
 )
 from repro.core.scenarios import get_scenario, list_scenarios
+from repro.core.temporal import TemporalScenario
 from repro.core.topology import build_topology
 from repro.data.synthetic import SyntheticTokens
 from repro.models.model import init_params, train_loss
@@ -72,8 +73,29 @@ def _hps_from_args(name: str, args):
     }[name]()
 
 
+def _parse_rate_pair(spec):
+    """Parse "down[,up]" Markov-rate flags (e.g. --burst 0.1,0.3)."""
+    if spec is None:
+        return None
+    parts = [float(x) for x in spec.split(",")]
+    if len(parts) == 1:
+        parts.append(0.5)
+    if len(parts) != 2:
+        raise ValueError(f"expected RATE or RATE_DOWN,RATE_UP, got {spec!r}")
+    return tuple(parts)
+
+
 def _scenario_from_args(args):
-    """Resolve the --scenario preset, with per-probability overrides."""
+    """Resolve the --scenario preset, with per-probability overrides.
+
+    Any temporal flag (--burst/--session/--staleness/--resample) upgrades
+    the run to a `TemporalScenario`: explicit Markov rates win, and the
+    i.i.d. churn/edge-drop probabilities lower to their degenerate Markov
+    equivalents (leave=c, rejoin=1−c reproduces i.i.d. churn bitwise —
+    see repro.core.temporal).
+    """
+    burst = _parse_rate_pair(args.burst)
+    session = _parse_rate_pair(args.session)
     scen = get_scenario(args.scenario)
     overrides = {
         field: value
@@ -86,7 +108,23 @@ def _scenario_from_args(args):
     }
     if overrides:
         scen = dataclasses.replace(scen, name=f"{scen.name}+custom", **overrides)
-    return dataclasses.replace(scen, seed=args.seed)
+    scen = dataclasses.replace(scen, seed=args.seed)
+    if not (burst or session or args.staleness > 0 or args.resample > 0):
+        return scen
+    if burst is None:
+        burst = (scen.edge_drop, 1.0 - scen.edge_drop) \
+            if scen.edge_drop > 0 else (0.0, 0.5)
+    if session is None:
+        session = (scen.churn, 1.0 - scen.churn) \
+            if scen.churn > 0 else (0.0, 0.5)
+    return TemporalScenario(
+        name=f"{scen.name}+temporal",
+        burst_down=burst[0], burst_up=burst[1],
+        leave=session[0], rejoin=session[1],
+        straggler=scen.straggler, staleness=args.staleness,
+        resample_every=args.resample, mobility_keep=args.mobility_keep,
+        seed=args.seed,
+    )
 
 
 def build_everything(args):
@@ -155,6 +193,21 @@ def main() -> None:
                     help="override: P[node misses the exchange per step]")
     ap.add_argument("--edge-drop", type=float, default=None,
                     help="override: P[link fails per step]")
+    ap.add_argument("--burst", default=None, metavar="DOWN[,UP]",
+                    help="Gilbert-Elliott per-link burst rates: P[good->bad]"
+                         "[,P[bad->good]] per step (temporal scenario)")
+    ap.add_argument("--session", default=None, metavar="LEAVE[,REJOIN]",
+                    help="geometric node sessions: P[up->down][,P[down->up]]"
+                         " per step (temporal scenario)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded staleness D: stragglers keep participating"
+                         " through their <=D-step-old params from the scan-"
+                         "carried snapshot ring (0 = miss the round)")
+    ap.add_argument("--resample", type=int, default=0,
+                    help="mobility: redraw the active edge subset every N "
+                         "steps (0 = off)")
+    ap.add_argument("--mobility-keep", type=float, default=0.7,
+                    help="P[base edge active within a mobility epoch]")
     ap.add_argument("--chunk", type=int, default=16,
                     help="steps per scan dispatch (engine chunk length)")
     ap.add_argument("--lr", type=float, default=0.05, help="baseline step size")
@@ -196,12 +249,18 @@ def main() -> None:
             print(f"[train] resumed from step {last}")
 
     runner = engine.make_scan_runner(
-        bound.step, chunk_size=args.chunk, step_takes_index=bound.dynamic
+        bound.step, chunk_size=args.chunk, step_takes_index=bound.dynamic,
+        carries_aux=bound.temporal,
     )
+    # the temporal carry (Markov chain state + staleness ring) threads
+    # through the scan and across chunk dispatches; it is not checkpointed,
+    # so a resumed run restarts the chains from their stationary draw.
+    aux = bound.aux_init(state) if bound.temporal else None
     log_every = max(args.log_every or args.chunk, 1)
     t0 = time.time()
     k = start
     cum_bits = wire_per_step * start
+    stale_hist = None
     next_ckpt = (start // args.ckpt_every + 1) * args.ckpt_every
     while k < args.steps:
         length = min(args.chunk, args.steps - k)
@@ -211,13 +270,17 @@ def main() -> None:
         # k_start keeps batches and scenario realizations aligned with the
         # *global* step index across chunk dispatches.
         state, metrics, info = runner(
-            state, make_batch, length, copy_state=False, k_start=k0
+            state, make_batch, length, copy_state=False, k_start=k0, aux=aux
         )
+        aux = info["aux"]
         k += info["steps_dispatched"]
         if "wire_bits" in metrics:  # realized (surviving-edge) accounting
             cum_bits += float(np.sum(metrics["wire_bits"]))
         else:
             cum_bits += wire_per_step * info["steps_dispatched"]
+        if "stale_hist" in metrics:  # per-run staleness occupancy histogram
+            row = np.asarray(engine.staleness_hist(metrics["stale_hist"]))
+            stale_hist = row if stale_hist is None else stale_hist + row
         if (k // log_every) != (k0 // log_every) or k >= args.steps:
             loss = float(np.mean(metrics["loss_mean"]))
             extra = ""
@@ -227,6 +290,8 @@ def main() -> None:
                 extra += f" comm_nodes={int(metrics['comm_nodes'][-1])}"
             if "alive_nodes" in metrics:
                 extra += f" alive={int(metrics['alive_nodes'][-1])}"
+            if "stale_nodes" in metrics:
+                extra += f" stale={int(metrics['stale_nodes'][-1])}"
             if "sigma_mean" in metrics:
                 extra += f" sigma={float(metrics['sigma_mean'][-1]):.2f}"
             print(
@@ -238,6 +303,13 @@ def main() -> None:
         if args.ckpt_dir and k >= next_ckpt:
             save_checkpoint(args.ckpt_dir, k, state)
             next_ckpt = (k // args.ckpt_every + 1) * args.ckpt_every
+    if stale_hist is not None:
+        total = max(float(stale_hist.sum()), 1.0)
+        cells = " ".join(
+            f"tau={t}:{int(c)}({c / total:.0%})"
+            for t, c in enumerate(stale_hist)
+        )
+        print(f"[train] staleness histogram (participant-steps): {cells}")
     print("[train] done")
 
 

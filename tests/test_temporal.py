@@ -1,0 +1,395 @@
+"""Temporal-dynamics subsystem conformance suite.
+
+Pins the properties `repro.core.temporal` must guarantee:
+
+  * the Gilbert–Elliott edge chain and the session node chain match their
+    stationary laws (empirical occupancy over long scans) and transition
+    statistics (burst persistence);
+  * degenerate Markov rates (burst_up = 1 − burst_down, rejoin = 1 −
+    leave) reproduce the i.i.d. `Scenario` realization *bitwise*, and a
+    staleness-0 temporal run of the plain straggler process is
+    bit-identical to the existing i.i.d. straggler path (compared in
+    eager mode — per the FMA caveat, bitwise equality is only asserted
+    within one lowering);
+  * every temporal realization is doubly stochastic with delayed
+    stragglers participating and over-stale/churned nodes self-looped at
+    exactly 1;
+  * bounded-staleness mixing gathers the right ring snapshot (hand-built
+    reference: realized matrix × substituted stack + innovation add-back
+    + churn freeze) and preserves the per-leaf global parameter mean for
+    every registered algorithm;
+  * host and scan drivers produce identical trajectories on a fixed-seed
+    temporal scenario, with the Markov state and the staleness ring in
+    the scan carry (chunked runs agree across chunk sizes);
+  * mobility resampling holds the active edge subset fixed within an
+    epoch and redraws it across epochs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core.scenarios import (
+    Scenario,
+    make_scenario_arrays,
+    realization_matrix,
+    realize,
+)
+from repro.core.temporal import (
+    TemporalScenario,
+    advance,
+    get_temporal_scenario,
+    list_temporal_scenarios,
+    temporal_state_init,
+)
+from repro.core.topology import build_topology
+
+M = 8
+
+
+def _zero_grad_fn(w, batch, key):
+    del batch, key
+    return jnp.zeros(()), jax.tree_util.tree_map(jnp.zeros_like, w)
+
+
+def _linreg(m, n, spn=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w_star = rng.standard_normal(n)
+    a = rng.standard_normal((m, spn, n))
+    y = a @ w_star + 0.1 * rng.standard_normal((m, spn))
+    batch = (jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32))
+
+    def grad_fn(w, b, key):
+        aa, yy = b
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    return batch, grad_fn
+
+
+def _scan_chain(scen, arrays, steps):
+    """Advance the Markov chains `steps` times, stacking the states."""
+    ts0 = temporal_state_init(scen, arrays)
+
+    def body(ts, k):
+        ts2, _, _, _ = advance(scen, arrays, ts, k)
+        return ts2, (ts2.edge_bad, ts2.node_down)
+
+    _, (bad, down) = jax.jit(
+        lambda t0: jax.lax.scan(body, t0, jnp.arange(steps))
+    )(ts0)
+    return np.asarray(bad), np.asarray(down)
+
+
+def test_temporal_validation_and_presets():
+    with pytest.raises(ValueError, match="probability"):
+        TemporalScenario(burst_down=1.5)
+    with pytest.raises(ValueError, match="staleness"):
+        TemporalScenario(staleness=-1)
+    with pytest.raises(ValueError, match="permanent"):
+        TemporalScenario(burst_down=0.1, burst_up=0.0)
+    with pytest.raises(ValueError, match="permanent"):
+        TemporalScenario(leave=0.1, rejoin=0.0)
+    with pytest.raises(ValueError, match="unknown temporal"):
+        get_temporal_scenario("nope")
+    for name in list_temporal_scenarios():
+        scen = get_temporal_scenario(name)
+        assert scen.name == name
+        assert not scen.is_static
+    assert TemporalScenario().is_static
+    assert TemporalScenario(resample_every=10).is_static  # keep = 1.0
+    s = TemporalScenario(burst_down=0.1, burst_up=0.3)
+    assert abs(s.stationary_bad - 0.25) < 1e-12
+    assert abs(s.mean_burst_len - 1 / 0.3) < 1e-12
+    s = TemporalScenario(leave=0.1, rejoin=0.3)
+    assert abs(s.stationary_down - 0.25) < 1e-12
+
+
+def test_gilbert_elliott_stationary_occupancy():
+    """Empirical bad-state occupancy over a long scan matches the chain's
+    stationary law, and the one-step persistence P[bad -> bad] matches
+    1 - burst_up (the burstiness i.i.d. draws cannot produce)."""
+    scen = TemporalScenario(name="ge", burst_down=0.1, burst_up=0.25, seed=3)
+    topo = build_topology("ring", 10)
+    arrays = make_scenario_arrays(topo, scen)
+    bad, _ = _scan_chain(scen, arrays, 3000)  # [T, m, d]
+    valid = np.asarray(arrays.valid)
+    occ = bad[:, valid].mean()
+    assert abs(occ - scen.stationary_bad) < 0.03, (occ, scen.stationary_bad)
+    prev, cur = bad[:-1, valid], bad[1:, valid]
+    stay_bad = (prev & cur).sum() / max(prev.sum(), 1)
+    assert abs(stay_bad - (1.0 - scen.burst_up)) < 0.03, stay_bad
+    # the i.i.d. chain at the same occupancy would persist at ~28.6%
+    assert stay_bad > scen.stationary_bad + 0.2
+
+
+def test_session_stationary_occupancy():
+    """Node session chain: stationary down-fraction and geometric session
+    persistence (P[down -> down] = 1 - rejoin)."""
+    scen = TemporalScenario(name="sess", leave=0.1, rejoin=0.3, seed=4)
+    topo = build_topology("ring", 32)
+    arrays = make_scenario_arrays(topo, scen)
+    _, down = _scan_chain(scen, arrays, 2000)  # [T, m]
+    occ = down.mean()
+    assert abs(occ - scen.stationary_down) < 0.02, (occ, scen.stationary_down)
+    stay_down = (down[:-1] & down[1:]).sum() / max(down[:-1].sum(), 1)
+    assert abs(stay_down - (1.0 - scen.rejoin)) < 0.03, stay_down
+
+
+def test_degenerate_markov_matches_iid_bitwise():
+    """With burst_up = 1 − burst_down and rejoin = 1 − leave the chains
+    forget their state: every temporal mask equals the i.i.d. `Scenario`
+    draw bitwise — the anchor that ties the two realization paths to one
+    PRNG layout."""
+    e, c, s, seed = 0.3, 0.2, 0.4, 7
+    topo = build_topology("erdos_renyi", 12, p=0.5, seed=1)
+    iid = Scenario(name="i", edge_drop=e, churn=c, straggler=s, seed=seed)
+    tmp = TemporalScenario(
+        name="t", burst_down=e, burst_up=1.0 - e,
+        leave=c, rejoin=1.0 - c, straggler=s, staleness=0, seed=seed,
+    )
+    arrays = make_scenario_arrays(topo, iid)
+    ts = temporal_state_init(tmp, arrays)
+    for k in range(6):
+        r_iid = realize(iid, arrays, k)
+        ts, r_tmp, delayed, tau = advance(tmp, arrays, ts, k)
+        assert not bool(delayed.any()) and not bool(tau.any())
+        for field in ("edge_alive", "alive", "participating", "weights",
+                      "directed_edges"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_tmp, field)),
+                np.asarray(getattr(r_iid, field)), err_msg=f"{field}@{k}",
+            )
+
+
+def test_staleness_zero_bit_identical_to_iid_straggler_path():
+    """staleness=0 keeps the current straggler semantics exactly: a plain
+    straggler TemporalScenario and the i.i.d. Scenario produce
+    bit-identical parameters step by step (eager mode on both paths)."""
+    m, n = 8, 16
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=2)
+    batch, grad_fn = _linreg(m, n)
+    b_iid = ALG.get_algorithm("dpsgd").bind(
+        grad_fn, topo, ALG.DPSGDHp(lr=0.1),
+        scenario=Scenario(name="i", straggler=0.4, seed=3),
+    )
+    b_tmp = ALG.get_algorithm("dpsgd").bind(
+        grad_fn, topo, ALG.DPSGDHp(lr=0.1),
+        scenario=TemporalScenario(name="t", straggler=0.4, staleness=0, seed=3),
+    )
+    assert b_tmp.temporal and not b_iid.temporal
+    s_iid = b_iid.init(jax.random.PRNGKey(0), jnp.zeros((m, n)))
+    s_tmp = b_tmp.init(jax.random.PRNGKey(0), jnp.zeros((m, n)))
+    aux = b_tmp.aux_init(s_tmp)
+    for k in range(5):
+        s_iid, m_iid = b_iid.step(s_iid, batch, k)
+        s_tmp, m_tmp, aux = b_tmp.step(s_tmp, batch, k, aux)
+        np.testing.assert_array_equal(
+            np.asarray(s_iid.params), np.asarray(s_tmp.params), err_msg=str(k)
+        )
+        assert float(m_iid["wire_bits"]) == float(m_tmp["wire_bits"])
+        assert "stale_hist" not in m_tmp  # ring-free program, iid schema
+
+
+def test_temporal_realizations_doubly_stochastic_delayed_participate():
+    """Every temporal realization is symmetric doubly stochastic; delayed
+    stragglers keep participating (row != identity possible), while
+    churned and over-stale nodes self-loop at exactly 1."""
+    scen = TemporalScenario(
+        name="t", burst_down=0.15, burst_up=0.3, leave=0.2, rejoin=0.4,
+        straggler=0.5, staleness=2, seed=6,
+    )
+    topo = build_topology("erdos_renyi", 12, p=0.5, seed=0)
+    arrays = make_scenario_arrays(topo, scen)
+    ts = temporal_state_init(scen, arrays)
+    saw_delayed = saw_over = 0
+    for k in range(10):
+        ts, r, delayed, tau = advance(scen, arrays, ts, k)
+        b = np.asarray(realization_matrix(arrays, r), np.float64)
+        np.testing.assert_allclose(b.sum(axis=0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(b.sum(axis=1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(b, b.T, atol=1e-7)
+        assert b.min() >= 0.0
+        dl = np.asarray(delayed)
+        part = np.asarray(r.participating)
+        assert np.all(part[dl])          # delayed nodes participate
+        assert np.all(np.asarray(tau)[dl] >= 1)
+        assert np.all(np.asarray(tau) <= scen.staleness)  # bounded
+        over = np.asarray(ts.age) > scen.staleness        # past the bound
+        saw_delayed += int(dl.sum())
+        saw_over += int(over.sum())
+        for i in np.nonzero(~part)[0]:
+            assert b[i, i] == 1.0
+    assert saw_delayed > 0 and saw_over > 0
+
+
+def test_stale_mixing_matches_hand_reference():
+    """One-step conformance of the bounded-staleness exchange: realized
+    matrix x ring-substituted stack, + each delayed node's private
+    innovation, with churned nodes frozen — reproduced by hand from the
+    same chain and compared against the wrapped step."""
+    m, n = 10, 12
+    scen = TemporalScenario(
+        name="t", burst_down=0.2, burst_up=0.4, leave=0.2, rejoin=0.5,
+        straggler=0.5, staleness=2, seed=5,
+    )
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=3)
+    bound = ALG.get_algorithm("dpsgd").bind(
+        _zero_grad_fn, topo, ALG.DPSGDHp(lr=0.3), scenario=scen
+    )
+    rng = np.random.default_rng(1)
+    stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    state = bound.init(jax.random.PRNGKey(0), stacked)
+    aux = bound.aux_init(state)
+    batch = {"x": jnp.zeros((m, 2), jnp.float32)}
+
+    arrays = bound.scen_arrays
+    ts = temporal_state_init(scen, arrays)
+    ring = np.broadcast_to(np.asarray(stacked), (2, m, n)).copy()
+    saw_tau2 = 0
+    for k in range(8):
+        ts, r, delayed, tau = advance(scen, arrays, ts, k)
+        x = np.asarray(state.params)
+        slot = np.mod(k - np.asarray(tau), scen.staleness)
+        x_eff = np.where(
+            np.asarray(delayed)[:, None], ring[slot, np.arange(m)], x
+        )
+        bmat = np.asarray(realization_matrix(arrays, r))
+        expected = np.einsum("ji,jn->in", bmat, x_eff)
+        expected += np.where(np.asarray(delayed)[:, None], x - x_eff, 0.0)
+        expected = np.where(np.asarray(r.alive)[:, None], expected, x)
+        state, metrics, aux = bound.step(state, batch, k, aux)
+        np.testing.assert_allclose(
+            np.asarray(state.params), expected, rtol=1e-5, atol=1e-6,
+            err_msg=f"step {k}",
+        )
+        hist = np.asarray(metrics["stale_hist"])
+        assert hist.sum() == np.asarray(r.participating).sum()
+        assert hist[1:].sum() == np.asarray(delayed).sum()
+        saw_tau2 += int((np.asarray(tau) == 2).sum())
+        ring[k % scen.staleness] = x
+    assert saw_tau2 > 0  # the ring actually served a 2-step-old snapshot
+
+
+STALE = TemporalScenario(
+    name="stale", burst_down=0.1, burst_up=0.3, leave=0.1, rejoin=0.4,
+    straggler=0.4, staleness=3, seed=1,
+)
+
+
+@pytest.mark.parametrize("name", tuple(ALG.list_algorithms()))
+def test_stale_mixing_preserves_invariants_all_algorithms(name):
+    """Bounded-staleness runs keep the registry-wide zero-gradient
+    invariants: the five doubly-stochastic gossip algorithms preserve the
+    per-leaf global mean from heterogeneous parameters, and every
+    algorithm (PaME included — PME is receiver-normalized, so its
+    guarantee is the fixed point) preserves the global mean from
+    identical parameters, with the memory-free algorithms additionally
+    pinning every node (CHOCO/BEER surrogates and NIDS's correction
+    memory desync under churn, redistributing mean-preservingly)."""
+    m, n = M, 12
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=0)
+    hps = {
+        "pame": ALG.PaMEHp(nu=0.5, p=0.3, gamma=1.01, sigma0=8.0),
+        "anq_nids": ALG.AnqNidsHp(lr=0.1, qsgd_levels=1 << 20),
+    }.get(name)
+    bound = ALG.get_algorithm(name).bind(
+        _zero_grad_fn, topo, hps, scenario=STALE
+    )
+    batch = {"x": jnp.zeros((m, 2), jnp.float32)}
+    rng = np.random.default_rng(2)
+    atol = 1e-4 if name == "anq_nids" else 1e-5
+
+    if name != "pame":  # heterogeneous global-mean preservation
+        stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        state = bound.init(jax.random.PRNGKey(1), stacked, batch)
+        aux = bound.aux_init(state)
+        for k in range(6):
+            state, _, aux = bound.step(state, batch, k, aux)
+        np.testing.assert_allclose(
+            np.asarray(bound.params_of(state)).mean(axis=0),
+            np.asarray(stacked).mean(axis=0), atol=atol,
+        )
+
+    # identical parameters: global mean pinned for everyone; per-node
+    # fixed point for the memory-free algorithms (stale copy == fresh)
+    w0 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    state, _ = bound.run(
+        jax.random.PRNGKey(0), w0, m, lambda k: batch, 4,
+        tol_std=0.0, chunk_size=2,
+    )
+    out = np.asarray(bound.params_of(state))
+    np.testing.assert_allclose(
+        out.mean(axis=0), np.asarray(w0), atol=max(atol, 2e-5)
+    )
+    if name in ("pame", "dpsgd", "dfedsam"):
+        np.testing.assert_allclose(
+            out, np.broadcast_to(np.asarray(w0), out.shape),
+            atol=max(atol, 2e-5),
+        )
+
+
+def test_temporal_host_equals_scan_and_chunk_invariance():
+    """Acceptance: host and scan drivers produce identical trajectories on
+    a fixed-seed temporal scenario (the Markov state and the staleness
+    ring ride the scan carry), and the scan trajectory is invariant to
+    the chunk size (the aux carry survives chunk boundaries)."""
+    m, n = M, 16
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn = _linreg(m, n)
+    scen = get_temporal_scenario("markov_harsh")
+    bound = ALG.get_algorithm("choco").bind(
+        grad_fn, topo, ALG.ChocoHp(lr=0.05), scenario=scen
+    )
+    outs = {}
+    for tag, kwargs in (
+        ("host", dict(driver="host")),
+        ("scan2", dict(driver="scan", chunk_size=2)),
+        ("scan4", dict(driver="scan", chunk_size=4)),
+    ):
+        _, hist = bound.run(
+            jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 8,
+            tol_std=0.0, **kwargs,
+        )
+        outs[tag] = hist
+    for tag in ("scan2", "scan4"):
+        np.testing.assert_allclose(
+            outs[tag]["loss"], outs["host"]["loss"], rtol=1e-5, atol=1e-7
+        )
+        assert outs[tag]["wire_bits"] == outs["host"]["wire_bits"]
+        assert outs[tag]["alive_nodes"] == outs["host"]["alive_nodes"]
+        assert outs[tag]["stale_nodes"] == outs["host"]["stale_nodes"]
+        assert outs[tag]["staleness_hist"] == outs["host"]["staleness_hist"]
+    hist = outs["scan4"]
+    assert len(hist["staleness_hist"]) == scen.staleness + 1
+    assert sum(hist["staleness_hist"]) > 0
+    assert hist["wire_bits_total"] == sum(hist["wire_bits"])
+
+
+def test_mobility_resampling_epochs():
+    """Mobility: the active edge subset is constant within an epoch and is
+    redrawn across epochs."""
+    scen = TemporalScenario(
+        name="mob", resample_every=4, mobility_keep=0.5, seed=2
+    )
+    topo = build_topology("erdos_renyi", 12, p=0.6, seed=0)
+    arrays = make_scenario_arrays(topo, scen)
+    ts = temporal_state_init(scen, arrays)
+    masks = []
+    for k in range(12):
+        ts, r, _, _ = advance(scen, arrays, ts, k)
+        masks.append(np.asarray(r.edge_alive))
+    for e0 in range(0, 12, 4):
+        for k in range(e0 + 1, e0 + 4):
+            np.testing.assert_array_equal(masks[k], masks[e0])
+    diffs = sum(
+        int(not np.array_equal(masks[a], masks[b]))
+        for a, b in ((0, 4), (4, 8), (0, 8))
+    )
+    assert diffs >= 2  # epochs actually resample
+    # realized matrices stay doubly stochastic under resampling
+    b = np.asarray(realization_matrix(arrays, r), np.float64)
+    np.testing.assert_allclose(b.sum(axis=0), 1.0, atol=1e-5)
