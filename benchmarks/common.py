@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,15 +75,45 @@ def chunk_for(steps: int) -> int:
     return min(32, steps)
 
 
-def timed(fn: Callable, *args, repeats: int = 3) -> float:
-    """us per call (post-jit)."""
-    out = fn(*args)
-    jax.block_until_ready(out)
+def benchmark(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> dict:
+    """Wall-clock a callable with explicit warmup/measure phases.
+
+    ``warmup`` calls run first (the first one pays tracing + compilation;
+    its wall time is reported as ``warmup_s`` so compile cost stays
+    visible), then ``iters`` timed repetitions, each synchronized with
+    ``jax.block_until_ready``.  Returns microseconds per call as
+    ``us_min`` (the steady-state figure — least scheduler noise),
+    ``us_median`` and ``us_mean``, plus the raw phases.  Replaces the old
+    one-number ``timed`` helper so benchmark artifacts can report compile
+    time and steady state separately.
+    """
     t0 = time.perf_counter()
-    for _ in range(repeats):
+    out = None
+    for _ in range(max(warmup, 0)):
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeats * 1e6
+    if out is not None:
+        jax.block_until_ready(out)
+    warmup_s = time.perf_counter() - t0
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times_us = np.asarray(times) * 1e6
+    return {
+        "us_min": float(times_us.min()),
+        "us_median": float(np.median(times_us)),
+        "us_mean": float(times_us.mean()),
+        "warmup_s": warmup_s,
+        "iters": int(len(times_us)),
+    }
+
+
+def mean_std(values) -> Tuple[float, float]:
+    """(mean, std) of a per-lane/per-seed metric as plain floats."""
+    arr = np.asarray(values, dtype=np.float64)
+    return float(arr.mean()), float(arr.std())
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

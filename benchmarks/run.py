@@ -8,13 +8,19 @@ Full curves land in benchmarks/artifacts/bench_results.json for
 EXPERIMENTS.md.
 
 Figure map:
-  bench_transmission_rate  Fig 2a & 3   (s/n sweep, Example 1)
-  bench_participation      Fig 2b & 4   (nu sweep, Example 1)
-  bench_comm_period        Fig 2c/d,5,6 (kappa homo/hetero, Example 1)
+  bench_transmission_rate  Fig 2a & 3   (s/n sweep, Example 1; seeds batched)
+  bench_participation      Fig 2b & 4   (nu sweep, Example 1; one batched
+                                         nu x seed grid per m)
+  bench_comm_period        Fig 2c/d,5,6 (kappa homo/hetero, Example 1; one
+                                         batched kappa x seed grid each)
   bench_connectivity       Fig 7        (degree x s/n heatmap)
   bench_vs_baselines       Figs 8-10    (Example 2, registry race: PaME vs
-                                         D-PSGD/DFedSAM/CHOCO/BEER/ANQ-NIDS)
+                                         D-PSGD/DFedSAM/CHOCO/BEER/ANQ-NIDS,
+                                         mean ± std over batched seed lanes)
   bench_mixing             —            (dense einsum vs sparse neighbor gossip)
+  bench_sweep              —            (batched lane engine vs per-cell loop;
+                                         slots vs segment-sum gossip core;
+                                         emits BENCH_sweep.json)
   bench_scenarios          —            (dynamic networks: churn x topology race
                                          with realized per-step wire bits)
   bench_heterogeneity      Figs 11-12   (label-skew CNN / Dirichlet ResNet-20)
@@ -36,15 +42,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import PaMEConfig, build_topology, run_pame
+from repro.core.algorithms import lane_finals
 from repro.core.pame import make_pame_runner
 from repro.core.pme import message_bits
 
 from benchmarks.common import (
+    benchmark,
     chunk_for,
     csv_row,
     linreg_problem,
     logreg_problem,
-    timed,
+    mean_std,
 )
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -89,9 +97,57 @@ def _pame_run(m, n, cfg, steps, seed=0, problem="linreg", topo_kind="erdos_renyi
     return out
 
 
+SWEEP_SEEDS = 5  # >= 5 seeds behind every mean ± std table entry
+
+
+def _pame_grid(m, n, cfgs, steps, seeds=None, topo_kind="erdos_renyi",
+               topo_kwargs=None, spn=128, tol_std=1e-3):
+    """Run a C-config × S-seed PaME grid as ONE batched scan (one compile).
+
+    Configs may differ in any field `bind_batched` can thread (nu, gamma,
+    sigma0, kappa_* — not p, which fixes the payload shape).  The problem
+    instance and topology are fixed; lanes vary the algorithm's PRNG
+    stream.  Returns per-config rows with mean ± std over the seed lanes.
+    """
+    from repro.core import algorithms as ALG
+
+    seeds = list(range(SWEEP_SEEDS)) if seeds is None else list(seeds)
+    topo = build_topology(topo_kind, m, **(topo_kwargs or dict(p=0.4, seed=0)))
+    batch, grad_fn, objective = linreg_problem(m, n, spn=spn, seed=0)
+    chunk = chunk_for(steps)
+    ba = ALG.get_algorithm("pame").bind_batched(
+        grad_fn, topo, cfgs, seeds=seeds
+    )
+    runner = ba.make_runner(
+        objective_fn=objective, tol_std=tol_std, chunk_size=chunk
+    )
+    # warm-up: ONE compile covers the whole grid
+    runner(jnp.zeros(n), m, lambda k: batch, chunk)
+    t0 = time.perf_counter()
+    state, hist = runner(jnp.zeros(n), m, lambda k: batch, steps)
+    wall = time.perf_counter() - t0
+    finals = lane_finals(hist)
+    lane_steps = wall / max(int(hist["steps_dispatched"]) * ba.lanes, 1)
+    rows = []
+    for c, cfg in enumerate(cfgs):
+        mask = hist["lane_config"] == c
+        fm, fs = mean_std(finals[mask])
+        rm, _ = mean_std(hist["steps_run"][mask])
+        rows.append({
+            "final_mean": fm, "final_std": fs, "rounds_mean": rm,
+            "seeds": len(seeds), "us_per_lane_step": lane_steps * 1e6,
+            "mean_t": float(np.mean(np.maximum(1, np.floor(cfg.nu * topo.degrees)))),
+        })
+    return rows
+
+
 # ---------------------------------------------------------------------------
 def bench_transmission_rate(quick=False):
-    """Fig 2a/3: final objective & convergence vs s/n for m in {16,32,64}."""
+    """Fig 2a/3: final objective & convergence vs s/n for m in {16,32,64}.
+
+    p fixes the message payload shape (trace-static), so each (m, p) cell
+    compiles once and its SWEEP_SEEDS seed replicas run as lanes of that
+    one program."""
     n = 300
     rates = [0.1, 0.2, 0.4, 0.6, 1.0]
     ms = [16, 32] if quick else [16, 32, 64]
@@ -99,17 +155,18 @@ def bench_transmission_rate(quick=False):
     for m in ms:
         for p in rates:
             cfg = PaMEConfig(nu=0.2, p=p, gamma=1.01, sigma0=8.0)
-            r = _pame_run(m, n, cfg, steps=300, problem="linreg")
+            (r,) = _pame_grid(m, n, [cfg], steps=300)
             table[f"m{m}_p{p}"] = r
             csv_row(
-                f"transmission_rate/m={m}/s_over_n={p}", r["us_per_call"],
-                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+                f"transmission_rate/m={m}/s_over_n={p}", r["us_per_lane_step"],
+                f"final_obj={r['final_mean']:.4f}±{r['final_std']:.4f}"
+                f";rounds={r['rounds_mean']:.0f};seeds={r['seeds']}",
             )
     # paper claim C4: gains are marginal once s/n exceeds ~0.2
     for m in ms:
-        p01 = table[f"m{m}_p0.1"]["final"]
-        p02 = table[f"m{m}_p0.2"]["final"]
-        hi = table[f"m{m}_p1.0"]["final"]
+        p01 = table[f"m{m}_p0.1"]["final_mean"]
+        p02 = table[f"m{m}_p0.2"]["final_mean"]
+        hi = table[f"m{m}_p1.0"]["final_mean"]
         csv_row(
             f"transmission_rate/claimC4/m={m}", 0.0,
             f"final_p0.1={p01:.4f};final_p0.2={p02:.4f};final_p1.0={hi:.4f};"
@@ -119,42 +176,55 @@ def bench_transmission_rate(quick=False):
 
 
 def bench_participation(quick=False):
-    """Fig 2b/4: nu sweep."""
+    """Fig 2b/4: nu sweep — per m, the whole nu × seed grid is ONE batched
+    scan (nu reaches the trace through the stacked TopologyArrays, so the
+    4 configs share a single compiled program)."""
     n = 300
     nus = [0.1, 0.2, 0.4, 0.6]
     ms = [16, 32] if quick else [16, 32, 64]
     table = {}
     for m in ms:
-        for nu in nus:
-            cfg = PaMEConfig(nu=nu, p=0.2, gamma=1.01, sigma0=8.0)
-            r = _pame_run(m, n, cfg, steps=300, problem="linreg")
+        cfgs = [PaMEConfig(nu=nu, p=0.2, gamma=1.01, sigma0=8.0) for nu in nus]
+        rows = _pame_grid(m, n, cfgs, steps=300)
+        for nu, r in zip(nus, rows):
             table[f"m{m}_nu{nu}"] = r
             csv_row(
-                f"participation/m={m}/nu={nu}", r["us_per_call"],
-                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+                f"participation/m={m}/nu={nu}", r["us_per_lane_step"],
+                f"final_obj={r['final_mean']:.4f}±{r['final_std']:.4f}"
+                f";rounds={r['rounds_mean']:.0f};seeds={r['seeds']}",
             )
     RESULTS["participation"] = table
 
 
 def bench_comm_period(quick=False):
-    """Fig 2c/d + 5/6: homogeneous vs heterogeneous kappa."""
+    """Fig 2c/d + 5/6: homogeneous vs heterogeneous kappa.  Each family's
+    kappa × seed grid is ONE batched scan — the per-node periods live in
+    the stacked TopologyArrays, not the traced program."""
     n, m = 300, 32
     table = {}
-    for k0 in [1, 2, 4, 8, 16]:
-        cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, homogeneous_kappa=k0)
-        r = _pame_run(m, n, cfg, steps=400)
+    homo_ks = [1, 2, 4, 8, 16]
+    cfgs = [
+        PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, homogeneous_kappa=k0)
+        for k0 in homo_ks
+    ]
+    for k0, r in zip(homo_ks, _pame_grid(m, n, cfgs, steps=400)):
         table[f"homo_k{k0}"] = r
         csv_row(
-            f"comm_period/homogeneous/k0={k0}", r["us_per_call"],
-            f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+            f"comm_period/homogeneous/k0={k0}", r["us_per_lane_step"],
+            f"final_obj={r['final_mean']:.4f}±{r['final_std']:.4f}"
+            f";rounds={r['rounds_mean']:.0f};seeds={r['seeds']}",
         )
-    for lo, hi in [(1, 3), (3, 7), (5, 10), (8, 16)]:
-        cfg = PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, kappa_lo=lo, kappa_hi=hi)
-        r = _pame_run(m, n, cfg, steps=400)
+    hetero = [(1, 3), (3, 7), (5, 10), (8, 16)]
+    cfgs = [
+        PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0, kappa_lo=lo, kappa_hi=hi)
+        for lo, hi in hetero
+    ]
+    for (lo, hi), r in zip(hetero, _pame_grid(m, n, cfgs, steps=400)):
         table[f"hetero_k{lo}_{hi}"] = r
         csv_row(
-            f"comm_period/heterogeneous/k=[{lo},{hi}]", r["us_per_call"],
-            f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+            f"comm_period/heterogeneous/k=[{lo},{hi}]", r["us_per_lane_step"],
+            f"final_obj={r['final_mean']:.4f}±{r['final_std']:.4f}"
+            f";rounds={r['rounds_mean']:.0f};seeds={r['seeds']}",
         )
     RESULTS["comm_period"] = table
 
@@ -183,14 +253,16 @@ def bench_connectivity(quick=False):
 def bench_vs_baselines(quick=False):
     """Figs 8-10: Example 2 (logistic regression) — objective/accuracy vs
     rounds and total transmitted volume, PaME vs all five baselines, as a
-    data-driven loop over the unified algorithm registry."""
+    data-driven loop over the unified algorithm registry.  Each algorithm's
+    SWEEP_SEEDS seed replicas run as lanes of one batched scan (one compile
+    per algorithm, mean ± std columns), emitted into EXPERIMENTS.md."""
     from repro.core import algorithms as ALG
 
     m, n = 32, 1000
     steps = 150 if quick else 300
+    seeds = list(range(SWEEP_SEEDS))
     topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
     batch, grad_fn, objective, accuracy = logreg_problem(m, n, spn=128, seed=0)
-    key = jax.random.PRNGKey(0)
     chunk = chunk_for(steps)
     race_hps = {
         "pame": PaMEConfig(nu=0.2, p=0.2, gamma=1.002, sigma0=1.0,
@@ -202,37 +274,54 @@ def bench_vs_baselines(quick=False):
         "anq_nids": ALG.AnqNidsHp(lr=0.1, qsgd_levels=16),
     }
     table = {}
+    md_rows = []
     for name in ALG.list_algorithms():
         # algorithms registered beyond the built-in six race on their
         # default hyperparameters
-        bound = ALG.get_algorithm(name).bind(
-            grad_fn, topo, race_hps.get(name), mixing="sparse"
+        ba = ALG.get_algorithm(name).bind_batched(
+            grad_fn, topo, [race_hps.get(name)], seeds=seeds, mixing="sparse"
         )
-        runner = bound.make_runner(
+        runner = ba.make_runner(
             objective_fn=objective, tol_std=1e-3, chunk_size=chunk
         )
-        # warm-up: one chunk compiles the scan executable; the timed run
-        # below then measures steady-state throughput, not tracing.
-        runner(key, jnp.zeros(n), m, lambda k: batch, chunk)
+        # warm-up: one chunk compiles the scan executable for ALL lanes
+        runner(jnp.zeros(n), m, lambda k: batch, chunk)
         t0 = time.perf_counter()
-        state, hist = runner(key, jnp.zeros(n), m, lambda k: batch, steps)
+        state, hist = runner(jnp.zeros(n), m, lambda k: batch, steps)
         wall = time.perf_counter() - t0
-        mean_w = jax.tree_util.tree_map(
-            lambda x: x.mean(axis=0), bound.params_of(state)
+        # per-lane accuracy of the node-mean parameters
+        mean_w = np.asarray(
+            jax.tree_util.tree_map(
+                lambda x: x.mean(axis=1), ba.params_of(state)
+            )
         )
+        accs = [accuracy(jnp.asarray(mean_w[l])) for l in range(ba.lanes)]
+        fm, fs = mean_std(lane_finals(hist))
+        am, a_s = mean_std(accs)
+        bm, bs = mean_std(hist["wire_bits_total"])
+        rm, _ = mean_std(hist["steps_run"])
         table[name] = {
-            "steps_run": hist["steps_run"],
-            "final": hist["objective"][-1],
-            "accuracy": accuracy(mean_w),
-            "us_per_call": wall / max(hist["steps_dispatched"], 1) * 1e6,
-            "bits": hist["wire_bits_total"],
+            "steps_run": rm,
+            "final": fm, "final_std": fs,
+            "accuracy": am, "accuracy_std": a_s,
+            "us_per_call": wall / max(
+                int(hist["steps_dispatched"]) * ba.lanes, 1) * 1e6,
+            "bits": bm, "bits_std": bs, "seeds": len(seeds),
         }
         rr = table[name]
         csv_row(
             f"vs_baselines/{name}", rr["us_per_call"],
-            f"acc={rr['accuracy']:.4f};final_obj={rr['final']:.4f}"
-            f";rounds={rr['steps_run']};gbits={rr['bits']/1e9:.3f}",
+            f"acc={rr['accuracy']:.4f}±{rr['accuracy_std']:.4f}"
+            f";final_obj={rr['final']:.4f}±{rr['final_std']:.4f}"
+            f";rounds={rr['steps_run']:.0f};gbits={rr['bits']/1e9:.3f}"
+            f";seeds={rr['seeds']}",
         )
+        md_rows.append((
+            name, f"{rr['final']:.4f} ± {rr['final_std']:.4f}",
+            f"{rr['accuracy']:.4f} ± {rr['accuracy_std']:.4f}",
+            f"{rr['steps_run']:.0f}", f"{rr['bits']/1e9:.3f}",
+            f"{rr['us_per_call']:.0f}",
+        ))
     # claim C7: PaME's transmitted-volume reduction vs every dense/compressed
     # competitor (CHOCO included now that it races too)
     for name, rr in table.items():
@@ -243,6 +332,20 @@ def bench_vs_baselines(quick=False):
             f"vs_baselines/claimC7_volume_reduction_vs_{name}", 0.0,
             f"reduction={red:.2%}",
         )
+    _update_experiments_md(
+        "vs-baselines",
+        "## PaME vs baselines: mean ± std over batched seed lanes\n\n"
+        f"Example 2 logistic regression (m={m}, n={n}), erdos_renyi(p=0.4), "
+        f"{steps} steps, tol_std=1e-3.  Each algorithm's {len(seeds)} seed "
+        "replicas run as lanes of ONE jitted scan "
+        "(`Algorithm.bind_batched`); mean gbits count the full run's "
+        "transmitted volume.\n\n"
+        + _fmt_md_table(
+            ("algo", "final objective", "accuracy", "rounds", "gbits",
+             "us/lane-step"),
+            md_rows,
+        ),
+    )
     RESULTS["vs_baselines"] = table
 
 
@@ -272,8 +375,8 @@ def bench_mixing(quick=False):
             mx_sp = make_mixer(topo, "sparse")    # padded neighbor gather
             dense_fn = jax.jit(mx_mat.mix)
             sparse_fn = jax.jit(mx_sp.mix)
-            us_dense = timed(dense_fn, tree, repeats=10)
-            us_sparse = timed(sparse_fn, tree, repeats=10)
+            us_dense = benchmark(dense_fn, tree, iters=10)["us_median"]
+            us_sparse = benchmark(sparse_fn, tree, iters=10)["us_median"]
             err = max(
                 float(jnp.max(jnp.abs(a - b_)))
                 for a, b_ in zip(
@@ -576,6 +679,157 @@ def bench_scenarios(quick=False):
     RESULTS["scenarios"] = table
 
 
+def bench_sweep(quick=False):
+    """The batched-sweep headline: an S-seed × C-config grid through the
+    vmap-over-lanes engine vs the per-cell Python loop (compile included),
+    plus the slots-vs-segment-sum gossip core race across degrees.
+    Everything lands in benchmarks/artifacts/BENCH_sweep.json so the perf
+    trajectory is machine-readable, and in an EXPERIMENTS.md block."""
+    from repro.core import algorithms as ALG
+
+    m, n = 32, 300
+    steps = 50 if quick else 100
+    n_seeds = 4 if quick else 8
+    seeds = list(range(n_seeds))
+    topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
+    batch, grad_fn, objective = linreg_problem(m, n, spn=64, seed=0)
+    chunk = chunk_for(steps)
+    grids = {
+        "dpsgd": [ALG.DPSGDHp(lr=0.1), ALG.DPSGDHp(lr=0.05)],
+        "pame": [
+            PaMEConfig(nu=0.2, p=0.2, gamma=1.01, sigma0=8.0),
+            PaMEConfig(nu=0.4, p=0.2, gamma=1.02, sigma0=4.0),
+        ],
+    }
+    sweep_table = {}
+    for name, cfgs in grids.items():
+        cells = len(cfgs) * len(seeds)
+        # per-cell loop: fresh bind + runner per (config, seed) — every
+        # cell re-traces and re-compiles its own scan executable
+        t0 = time.perf_counter()
+        loop_finals = []
+        for cfg in cfgs:
+            for s in seeds:
+                bound = ALG.get_algorithm(name).bind(grad_fn, topo, cfg)
+                _, hist = bound.run(
+                    jax.random.PRNGKey(s), jnp.zeros(n), m, lambda k: batch,
+                    steps, objective_fn=objective, tol_std=0.0,
+                    chunk_size=chunk,
+                )
+                loop_finals.append(hist["objective"][-1])
+        wall_loop = time.perf_counter() - t0
+        # batched: the whole grid is ONE jitted scan (compile included)
+        t0 = time.perf_counter()
+        ba = ALG.get_algorithm(name).bind_batched(
+            grad_fn, topo, cfgs, seeds=seeds
+        )
+        _, hist = ba.run(
+            jnp.zeros(n), m, lambda k: batch, steps,
+            objective_fn=objective, tol_std=0.0, chunk_size=chunk,
+        )
+        wall_batched = time.perf_counter() - t0
+        finals = lane_finals(hist)
+        max_dev = float(np.max(np.abs(finals - np.asarray(loop_finals))))
+        speedup = wall_loop / max(wall_batched, 1e-9)
+        sweep_table[name] = {
+            "cells": cells, "steps": steps,
+            "wall_loop_s": wall_loop, "wall_batched_s": wall_batched,
+            "speedup": speedup,
+            "us_per_cell_step_loop": wall_loop / (cells * steps) * 1e6,
+            "us_per_cell_step_batched": wall_batched / (cells * steps) * 1e6,
+            "max_final_dev": max_dev,
+        }
+        csv_row(
+            f"sweep/batched_vs_loop/{name}",
+            sweep_table[name]["us_per_cell_step_batched"],
+            f"speedup={speedup:.1f}x;cells={cells};loop_s={wall_loop:.1f}"
+            f";batched_s={wall_batched:.1f};max_final_dev={max_dev:.2e}",
+        )
+
+    # gossip core race: fused slot chain vs edge-list segment-sum, across
+    # degrees, on a model-layer-sized pytree.  Compile (warmup) time and
+    # steady state recorded separately — the segment-sum program is O(1)
+    # traced ops at any degree, the slot chain O(d).
+    from repro.core.mixing import default_impl, make_mixer
+
+    rng = np.random.default_rng(0)
+    gossip_table = {}
+    degs = [(32, 4), (64, 8)] if quick else [(32, 4), (64, 8), (128, 32), (256, 64)]
+    for m_, d_ in degs:
+        topo_ = build_topology("regular", m_, degree=d_, seed=0)
+        tree = {
+            "w": jnp.asarray(rng.standard_normal((m_, 64, 64)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((m_, 256)), jnp.float32),
+        }
+        row = {}
+        for impl in ("slots", "segsum"):
+            fn = jax.jit(make_mixer(topo_, "sparse", impl=impl).mix)
+            r = benchmark(fn, tree, warmup=1, iters=5)
+            row[impl] = {
+                "us_steady": r["us_min"], "us_median": r["us_median"],
+                "compile_s": r["warmup_s"],
+            }
+        gossip_table[f"m{m_}_d{d_}"] = row
+        csv_row(
+            f"sweep/gossip/m={m_}/d={d_}", row["slots"]["us_steady"],
+            f"slots_us={row['slots']['us_steady']:.0f}"
+            f";segsum_us={row['segsum']['us_steady']:.0f}"
+            f";slots_compile_s={row['slots']['compile_s']:.2f}"
+            f";segsum_compile_s={row['segsum']['compile_s']:.2f}",
+        )
+
+    artifact = {
+        "backend": jax.default_backend(),
+        "default_gossip_impl": default_impl(),
+        "batched_vs_loop": sweep_table,
+        "gossip_core": gossip_table,
+    }
+    with open(os.path.join(ART, "BENCH_sweep.json"), "w") as f:
+        json.dump(artifact, f, indent=1, default=float)
+    print(f"# wrote {os.path.join(ART, 'BENCH_sweep.json')}")
+
+    md_rows = [
+        (name, r["cells"],
+         f"{r['wall_loop_s']:.1f}", f"{r['wall_batched_s']:.1f}",
+         f"{r['speedup']:.1f}x", f"{r['max_final_dev']:.1e}")
+        for name, r in sweep_table.items()
+    ]
+    gossip_rows = [
+        (key, f"{row['slots']['us_steady']:.0f}",
+         f"{row['segsum']['us_steady']:.0f}",
+         f"{row['slots']['compile_s']:.2f}",
+         f"{row['segsum']['compile_s']:.2f}")
+        for key, row in gossip_table.items()
+    ]
+    _update_experiments_md(
+        "batched-sweep",
+        "## Batched sweep engine: one compile for the whole grid\n\n"
+        f"{n_seeds} seeds × 2 configs per algorithm on linreg "
+        f"(m={m}, n={n}), {steps} steps, compile time included in both "
+        "columns.  The per-cell loop re-traces and re-compiles every "
+        "(config, seed) cell; the batched engine runs the grid as lanes "
+        "of one jitted scan (`engine.run_batched`).  max_dev is the "
+        "largest |batched − looped| final objective across cells.\n\n"
+        + _fmt_md_table(
+            ("algo", "cells", "loop_s", "batched_s", "speedup", "max_dev"),
+            md_rows,
+        )
+        + "\n\n### Gossip core: fused slot chain vs edge-list segment-sum\n\n"
+        f"`Mixer.mix` on a 64×64+256 pytree, backend={jax.default_backend()}"
+        ", steady state = min over 5 reps; compile_s is the first-call "
+        "(trace + compile) wall time.  The segment-sum program is O(1) "
+        "traced ops at any degree — on CPU, XLA's serialized scatter "
+        "keeps the fused slot chain ahead at runtime (hence the "
+        "backend-gated default, `repro.core.mixing.default_impl`).\n\n"
+        + _fmt_md_table(
+            ("graph", "slots us/call", "segsum us/call",
+             "slots compile s", "segsum compile s"),
+            gossip_rows,
+        ),
+    )
+    RESULTS["sweep"] = {**sweep_table, "gossip": gossip_table}
+
+
 def bench_heterogeneity(quick=False):
     """Fig 11 (label skew, CNN) + Fig 12 (Dirichlet, ResNet-20), synthetic
     stand-in images (offline container; heterogeneity mechanism exact)."""
@@ -737,8 +991,10 @@ def bench_kernels(quick=False):
     w = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
     masks = jnp.asarray(rng.random((m, n)) < 0.2)
     a = jnp.asarray(((rng.random((m, m)) < 0.4) & ~np.eye(m, dtype=bool)), jnp.float32)
-    us_k = timed(lambda: pme_average(w, masks, a))
-    us_r = timed(jax.jit(lambda: pme_average_ref(w, masks.astype(w.dtype), a)))
+    us_k = benchmark(lambda: pme_average(w, masks, a), iters=3)["us_median"]
+    us_r = benchmark(
+        jax.jit(lambda: pme_average_ref(w, masks.astype(w.dtype), a)), iters=3
+    )["us_median"]
     err = float(jnp.max(jnp.abs(pme_average(w, masks, a) - pme_average_ref(w, masks.astype(w.dtype), a))))
     table["pme_average"] = {"us_kernel": us_k, "us_ref": us_r, "max_err": err}
     csv_row("kernels/pme_average", us_k, f"ref_us={us_r:.1f};max_err={err:.2e}")
@@ -747,8 +1003,10 @@ def bench_kernels(quick=False):
     q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
-    us_k = timed(lambda: flash_attention(q, k, v, block_q=64, block_k=64), repeats=1)
-    us_r = timed(jax.jit(lambda: attention_ref(q, k, v)))
+    us_k = benchmark(
+        lambda: flash_attention(q, k, v, block_q=64, block_k=64), iters=1
+    )["us_median"]
+    us_r = benchmark(jax.jit(lambda: attention_ref(q, k, v)), iters=3)["us_median"]
     err = float(jnp.max(jnp.abs(flash_attention(q, k, v, block_q=64, block_k=64) - attention_ref(q, k, v))))
     table["flash_attention"] = {"us_kernel": us_k, "us_ref": us_r, "max_err": err}
     csv_row("kernels/flash_attention", us_k, f"ref_us={us_r:.1f};max_err={err:.2e}")
@@ -760,8 +1018,13 @@ def bench_kernels(quick=False):
     cum = jnp.cumsum(dtc * av[None, None, None], axis=2)
     bc = jnp.asarray(rng.standard_normal((B_, Nc, L, G, N)), jnp.float32)
     cc = jnp.asarray(rng.standard_normal((B_, Nc, L, G, N)), jnp.float32)
-    us_k = timed(lambda: ssd_intra_chunk(xc, dtc, cum, bc, cc, H // G), repeats=1)
-    us_r = timed(jax.jit(lambda: ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, H // G)))
+    us_k = benchmark(
+        lambda: ssd_intra_chunk(xc, dtc, cum, bc, cc, H // G), iters=1
+    )["us_median"]
+    us_r = benchmark(
+        jax.jit(lambda: ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, H // G)),
+        iters=3,
+    )["us_median"]
     yk, _ = ssd_intra_chunk(xc, dtc, cum, bc, cc, H // G)
     yr, _ = ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, H // G)
     err = float(jnp.max(jnp.abs(yk - yr)))
@@ -797,6 +1060,7 @@ BENCHES = {
     "connectivity": bench_connectivity,
     "vs_baselines": bench_vs_baselines,
     "mixing": bench_mixing,
+    "sweep": bench_sweep,
     "scenarios": bench_scenarios,
     "heterogeneity": bench_heterogeneity,
     "comm_volume": bench_comm_volume,

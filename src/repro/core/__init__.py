@@ -12,7 +12,13 @@
   gossip       — mesh-sharded gossip (dense-masked + compressed payload)
 """
 from repro.core.topology import Topology, build_topology  # noqa: F401
-from repro.core.mixing import Mixer, make_mixer, mix_padded  # noqa: F401
+from repro.core.mixing import (  # noqa: F401
+    Mixer,
+    gather_terms,
+    make_mixer,
+    mix_padded,
+)
+from repro.core.engine import run_batched  # noqa: F401
 from repro.core.pme import (  # noqa: F401
     pme_average,
     pme_average_pytree,
@@ -31,8 +37,10 @@ from repro.core.pame import (  # noqa: F401
 )
 from repro.core.algorithms import (  # noqa: F401
     Algorithm,
+    BatchedAlgorithm,
     BoundAlgorithm,
     get_algorithm,
+    lane_finals,
     list_algorithms,
     register,
 )

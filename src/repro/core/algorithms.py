@@ -39,7 +39,7 @@ Extending::
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple, Union
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +58,8 @@ from repro.core.topology import Topology
 AnyScenario = Union[scen_mod.Scenario, temp_mod.TemporalScenario]
 
 __all__ = [
-    "Algorithm", "BoundAlgorithm", "AlgoContext",
-    "register", "get_algorithm", "list_algorithms",
+    "Algorithm", "BoundAlgorithm", "BatchedAlgorithm", "AlgoContext",
+    "register", "get_algorithm", "list_algorithms", "lane_finals",
     "PaMEHp", "DPSGDHp", "DFedSAMHp", "ChocoHp", "BeerHp", "AnqNidsHp",
 ]
 
@@ -140,6 +140,15 @@ class Algorithm:
     # Algorithms whose step emits its own "wire_bits" metric (PaME) or that
     # send nothing leave this None.
     edge_bits: Optional[Callable] = None
+    # hyperparameter fields that shape the traced program (payload sizes,
+    # python loop counts, wire formats): bind_batched refuses configs that
+    # differ in these — they cannot share one compiled sweep.
+    static_hp_fields: Tuple[str, ...] = ()
+    # fields realized into device arrays by `setup` (e.g. PaME's nu /
+    # kappa_* -> TopologyArrays): configs may differ in them without the
+    # scalar itself entering the trace — the stacked per-config extras
+    # carry the difference.
+    setup_hp_fields: Tuple[str, ...] = ()
 
     def bind(
         self,
@@ -182,6 +191,116 @@ class Algorithm:
                 mixing_mode=mixing,
             )
         return BoundAlgorithm(self, ctx)
+
+    def bind_batched(
+        self,
+        grad_fn: Callable,
+        topo: Topology,
+        hps_list: Optional[Sequence[object]] = None,
+        *,
+        seeds: Sequence[int] = (0,),
+        mixing: str = "sparse",
+        seed: int = 0,
+        scenario: Optional[AnyScenario] = None,
+    ) -> "BatchedAlgorithm":
+        """Close the spec over S seeds × C configs as ONE lane-batched step.
+
+        The returned :class:`BatchedAlgorithm` runs every (seed, config)
+        cell of the grid as one lane of a single jitted scan
+        (``engine.make_scan_runner(lanes=L)``): per-lane PRNG streams
+        enter through per-lane state keys (lane (s, c) reproduces the
+        unbatched ``bind(hps_c)`` run under ``PRNGKey(s)`` to fp
+        tolerance), per-config hyperparameters enter either as traced
+        per-lane scalars (float fields: lr, gamma, sigma0, ...) or
+        through per-config device arrays stacked out of ``setup`` (PaME's
+        nu / kappa draws via ``TopologyArrays``), and the whole grid
+        compiles once instead of once per cell.
+
+        Fields named in ``static_hp_fields`` shape the traced program
+        (payload sizes, loop counts) and must therefore be equal across
+        ``hps_list`` — differing values raise.  Lane order is
+        config-major: ``lane = c * len(seeds) + s``.
+
+        A dynamic ``scenario`` is supported: each lane folds its seed
+        into the scenario key, so different seeds draw independent
+        network sample paths (and the same seed under different configs
+        sees the same path — paired comparisons).
+        """
+        hps_list = [self.hp_cls() if h is None else h
+                    for h in (hps_list or [None])]
+        for h in hps_list:
+            if not isinstance(h, self.hp_cls):
+                raise TypeError(
+                    f"{self.name} expects {self.hp_cls.__name__}, "
+                    f"got {type(h).__name__}"
+                )
+        seeds = [int(s) for s in seeds]
+        if not seeds:
+            raise ValueError("bind_batched needs at least one seed")
+
+        # per-config setup -> (effective hps, extras)
+        extras_list, eff_hps = [], []
+        for h in hps_list:
+            extras = dict(self.setup(topo, h, mixing, seed)) if self.setup else {}
+            if "hps" in extras:
+                h = extras.pop("hps")
+            extras_list.append(extras)
+            eff_hps.append(h)
+        hps0 = eff_hps[0]
+
+        # classify differing hp fields: static -> refuse, setup-realized ->
+        # carried by the stacked extras, float -> traced per-lane scalar
+        swept: dict = {}
+        for field in dataclasses.fields(self.hp_cls):
+            vals = [getattr(h, field.name) for h in eff_hps]
+            if all(v == vals[0] for v in vals[1:]):
+                continue
+            if field.name in self.static_hp_fields:
+                raise ValueError(
+                    f"{self.name}: hp field {field.name!r} shapes the traced "
+                    f"program and must be equal across batched configs "
+                    f"(got {vals})"
+                )
+            if field.name in self.setup_hp_fields:
+                continue  # realized via the stacked setup extras
+            if isinstance(vals[0], float) and not isinstance(vals[0], bool):
+                swept[field.name] = np.asarray(vals, np.float32)
+                continue
+            raise ValueError(
+                f"{self.name}: cannot batch over non-float hp field "
+                f"{field.name!r} (got {vals}); sweep it across separate "
+                "binds instead"
+            )
+
+        # split extras into per-config array stacks vs shared objects
+        shared_extras: dict = {}
+        stacked_extras: dict = {}
+        for key in extras_list[0]:
+            values = [ex[key] for ex in extras_list]
+            leaves = jax.tree_util.tree_leaves(values[0])
+            if leaves and all(
+                isinstance(leaf, (jax.Array, np.ndarray))
+                for v in values for leaf in jax.tree_util.tree_leaves(v)
+            ):
+                stacked_extras[key] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                    *values,
+                )
+            else:
+                shared_extras[key] = values[0]
+
+        mixer = make_mixer(topo, "matrix" if mixing == "matrix" else mixing)
+        ctx0 = AlgoContext(grad_fn=grad_fn, topo=topo, hps=hps0, mixer=mixer,
+                           extras=shared_extras)
+        scen_arrays = None
+        if scenario is not None and not scenario.is_static:
+            scen_arrays = scen_mod.make_scenario_arrays(topo, scenario)
+        elif scenario is not None:
+            scenario = None  # static scenario == the fixed-Topology path
+        return BatchedAlgorithm(
+            self, ctx0, eff_hps, seeds, swept, stacked_extras,
+            mixing_mode=mixing, scenario=scenario, scen_arrays=scen_arrays,
+        )
 
 
 class BoundAlgorithm:
@@ -451,6 +570,260 @@ class BoundAlgorithm:
         )
 
 
+class BatchedAlgorithm:
+    """S seeds × C configs of one Algorithm as a single lane-batched step.
+
+    Built by :meth:`Algorithm.bind_batched`.  ``step`` has the exact
+    signature the engine expects of a lane-batched step — ``(state,
+    batch[, k][, aux]) -> (state, metrics[, aux])`` with state leaves
+    ``[L, m, ...]`` and per-step metric values ``[L]`` — implemented as a
+    single ``jax.vmap`` over (state, per-lane hp scalars, per-config
+    extras stacks[, per-lane scenario key, aux]); the batch and global
+    step index broadcast.  ``run``/``make_runner`` drive it through
+    ``engine.make_scan_runner(lanes=L)``: one compile for the whole
+    grid, per-lane termination, per-lane metric buffers and wire-bit
+    accounting.
+
+    Lane order is config-major: ``lane = c * S + s`` — ``lane_config``
+    / ``lane_seed`` in the returned history map lanes back to grid
+    cells, and :func:`lane_finals` reduces a per-lane metric buffer at
+    each lane's own stopping step.
+    """
+
+    def __init__(
+        self,
+        spec: Algorithm,
+        ctx0: AlgoContext,
+        hps_list: Sequence[object],
+        seeds: Sequence[int],
+        swept: dict,            # field -> [C] np.float32 of per-config values
+        stacked_extras: dict,   # extras key -> pytree with leading [C] axis
+        mixing_mode: str = "sparse",
+        scenario: Optional[AnyScenario] = None,
+        scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
+    ):
+        self.spec = spec
+        self.ctx0 = ctx0
+        self.hps_list = list(hps_list)
+        self.seeds = list(seeds)
+        self.scenario = scenario
+        self.scen_arrays = scen_arrays
+        self._mixing_mode = mixing_mode
+        c, s = len(self.hps_list), len(self.seeds)
+        self.lane_config = np.repeat(np.arange(c), s)       # [L]
+        self.lane_seed = np.asarray(self.seeds * c)         # [L]
+        # per-lane traced hp scalars (configs expanded over seeds)
+        self._lane_hp = {
+            f: jnp.asarray(vals[self.lane_config])
+            for f, vals in swept.items()
+        }
+        # per-lane setup extras ([C, ...] stacks expanded over seeds)
+        self._lane_extras = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, jnp.asarray(self.lane_config), axis=0),
+            stacked_extras,
+        )
+        # per-lane PRNG: lane (s, c) starts from PRNGKey(s), exactly the
+        # key an unbatched run for that seed would get
+        self._lane_keys = jnp.stack(
+            [jax.random.PRNGKey(int(s)) for s in self.lane_seed]
+        )
+        self._scen_keys = None
+        if scen_arrays is not None:
+            # per-seed network sample paths (shared across configs)
+            self._scen_keys = jax.vmap(
+                lambda s: jax.random.fold_in(scen_arrays.key, s)
+            )(jnp.asarray(self.lane_seed, jnp.uint32))
+
+    # -- grid geometry ------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def lanes(self) -> int:
+        return len(self.hps_list) * len(self.seeds)
+
+    @property
+    def dynamic(self) -> bool:
+        return self.scenario is not None
+
+    @property
+    def temporal(self) -> bool:
+        return isinstance(self.scenario, temp_mod.TemporalScenario)
+
+    @property
+    def params_of(self) -> Callable:
+        return self.spec.params_of
+
+    # -- lane plumbing ------------------------------------------------------
+    def _lane_bound(self, hp_vals: dict, ex_arrays: dict,
+                    scen_key: Optional[jax.Array]) -> BoundAlgorithm:
+        """Rebuild the single-lane BoundAlgorithm inside the vmapped body:
+        traced hp scalars replace the dataclass fields, the lane's slice
+        of the stacked setup extras joins the shared ones."""
+        hps = (dataclasses.replace(self.ctx0.hps, **hp_vals)
+               if hp_vals else self.ctx0.hps)
+        ctx = dataclasses.replace(
+            self.ctx0, hps=hps, extras={**self.ctx0.extras, **ex_arrays}
+        )
+        scen_arrays = (
+            self.scen_arrays._replace(key=scen_key)
+            if scen_key is not None else None
+        )
+        return BoundAlgorithm(
+            self.spec, ctx, scenario=self.scenario,
+            scen_arrays=scen_arrays, mixing_mode=self._mixing_mode,
+        )
+
+    def init(self, params0: object, m: int,
+             batch0: Optional[object] = None) -> object:
+        """Lane-stacked initial state ([L, m, ...] leaves)."""
+        stacked = B.stack_params(params0, m)
+
+        def lane(key, hp_vals, ex_arrays):
+            return self._lane_bound(hp_vals, ex_arrays, None).init(
+                key, stacked, batch0
+            )
+
+        return jax.vmap(lane)(self._lane_keys, self._lane_hp,
+                              self._lane_extras)
+
+    def aux_init(self, state: object) -> object:
+        """Lane-stacked TemporalCarry for a temporal bind."""
+        if not self.temporal:
+            raise TypeError(f"{self.name} is not bound to a TemporalScenario")
+
+        def lane(st, scen_key):
+            return temp_mod.temporal_carry_init(
+                self.scenario, self.scen_arrays._replace(key=scen_key),
+                self.spec.params_of(st),
+            )
+
+        return jax.vmap(lane)(state, self._scen_keys)
+
+    def step(self, state: object, batch: object,
+             k: Optional[jax.Array] = None, aux: Optional[object] = None):
+        """Lane-batched step — one vmap over the lane axis; the batch and
+        the global step index broadcast to every lane."""
+
+        def lane(st, hp_vals, ex_arrays, scen_key, ax):
+            ba = self._lane_bound(hp_vals, ex_arrays, scen_key)
+            if self.temporal:
+                return ba.step(st, batch, k, ax)
+            if self.dynamic:
+                return ba.step(st, batch, k)
+            return ba.step(st, batch)
+
+        return jax.vmap(lane)(
+            state, self._lane_hp, self._lane_extras, self._scen_keys, aux
+        )
+
+    def wire_bits(self, n: int) -> float:
+        """Expected bits/step (network-wide) of config 0 — the scalar the
+        training log prints; per-lane accounting lives in the history."""
+        return float(self.spec.wire_bits(self.ctx0.topo, self.hps_list[0], n))
+
+    # -- drivers ------------------------------------------------------------
+    def make_runner(
+        self,
+        *,
+        objective_fn: Optional[Callable] = None,
+        tol_std: float = 1e-3,
+        chunk_size: int = engine.DEFAULT_CHUNK_SIZE,
+    ) -> Callable:
+        """Persistent lane-batched scan runner:
+        ``run(params0, m, batch_fn, num_steps) -> (state, history)`` with
+        per-lane ``[steps, L]`` metric buffers in the history."""
+        runner = engine.make_scan_runner(
+            self.step, objective_fn=objective_fn,
+            params_of=self.spec.params_of, tol_std=tol_std,
+            chunk_size=chunk_size, step_takes_index=self.dynamic,
+            carries_aux=self.temporal, lanes=self.lanes,
+        )
+
+        def run(params0, m, batch_fn, num_steps):
+            batch0 = batch_fn(0) if self.spec.needs_batch0 else None
+            state = self.init(params0, m, batch0)
+            aux = self.aux_init(state) if self.temporal else None
+            state, metrics, info = runner(state, batch_fn, num_steps,
+                                          aux=aux)
+            return state, self._assemble_history(metrics, info, params0)
+
+        return run
+
+    def run(
+        self,
+        params0: object,
+        m: int,
+        batch_fn: Callable[[int], object],
+        num_steps: int,
+        *,
+        objective_fn: Optional[Callable] = None,
+        tol_std: float = 1e-3,
+        chunk_size: int = engine.DEFAULT_CHUNK_SIZE,
+    ) -> Tuple[object, dict]:
+        """One-shot batched grid run (see `make_runner`)."""
+        return self.make_runner(
+            objective_fn=objective_fn, tol_std=tol_std,
+            chunk_size=chunk_size,
+        )(params0, m, batch_fn, num_steps)
+
+    def _assemble_history(self, metrics: dict, info: dict,
+                          params0: object) -> dict:
+        history = {k: np.asarray(v) for k, v in metrics.items()
+                   if k != "stale_hist"}
+        steps_run = np.asarray(info["steps_run"])
+        if "stale_hist" in metrics:
+            # [steps, L, D+1] -> per-lane run-level histogram [L, D+1],
+            # each lane truncated at its own stopping step (a frozen lane
+            # keeps emitting rows until the last dispatched chunk)
+            rows = np.asarray(metrics["stale_hist"])
+            history["staleness_hist"] = np.stack([
+                rows[: steps_run[l], l].sum(axis=0)
+                for l in range(self.lanes)
+            ])
+        if "loss_mean" in history:
+            history["loss"] = history.pop("loss_mean")
+        history["steps_run"] = steps_run
+        history["steps_dispatched"] = info["steps_dispatched"]
+        history["lane_config"] = self.lane_config
+        history["lane_seed"] = self.lane_seed
+        n = sum(
+            int(np.prod(leaf.shape))
+            for leaf in jax.tree_util.tree_leaves(params0)
+        )
+        if "wire_bits" in history:
+            # dynamic: per-step realized bits [steps, L], truncated per lane
+            per = history["wire_bits"]
+            total = np.array([
+                per[: steps_run[l], l].sum() for l in range(self.lanes)
+            ])
+            history["wire_bits_total"] = total
+            history["wire_bits_per_step"] = total / np.maximum(steps_run, 1)
+        else:
+            per_cfg = np.array([
+                float(self.spec.wire_bits(self.ctx0.topo, h, n))
+                for h in self.hps_list
+            ])
+            history["wire_bits_per_step"] = per_cfg[self.lane_config]
+            history["wire_bits_total"] = (
+                history["wire_bits_per_step"] * steps_run
+            )
+        return history
+
+
+def lane_finals(history: dict, key: str = "objective") -> np.ndarray:
+    """Per-lane final value of a batched metric buffer: entry l is
+    ``history[key][steps_run[l] - 1, l]`` — each lane read at its own
+    stopping step (the buffers run to the last dispatched chunk)."""
+    buf = np.asarray(history[key])
+    steps_run = np.asarray(history["steps_run"])
+    lanes = buf.shape[1]
+    return np.array([
+        buf[max(int(steps_run[l]) - 1, 0), l] for l in range(lanes)
+    ])
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -544,6 +917,11 @@ register(Algorithm(
     setup=_pame_setup,
     # PaME's step emits its own realized "wire_bits" (per-message Eq. (8)
     # on the selected surviving neighbors), so no per-edge rate here.
+    # p fixes the message payload size s = round(p·n) (shape-static);
+    # nu / kappa_* are realized into TopologyArrays by setup, so batched
+    # configs may sweep them without the scalars entering the trace.
+    static_hp_fields=("p", "mask_mode", "exchange", "mixing"),
+    setup_hp_fields=("nu", "kappa_lo", "kappa_hi", "homogeneous_kappa"),
 ))
 
 register(Algorithm(
@@ -555,6 +933,7 @@ register(Algorithm(
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _full_msg_bits(hps, n)),
     edge_bits=_full_msg_bits,
+    # lr is a traced per-lane scalar under bind_batched
 ))
 
 register(Algorithm(
@@ -567,6 +946,7 @@ register(Algorithm(
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _full_msg_bits(hps, n)),
     edge_bits=_full_msg_bits,
+    static_hp_fields=("local_steps",),  # python loop count in the step
 ))
 
 
@@ -585,6 +965,8 @@ register(Algorithm(
         topo, n, _choco_edge_bits(hps, n)),
     edge_bits=_choco_edge_bits,
     setup=_choco_setup,
+    # the rand-k sparsifier's keep count round(frac·n) is shape-static
+    static_hp_fields=("comp_frac", "value_bits"),
 ))
 
 register(Algorithm(
@@ -600,6 +982,7 @@ register(Algorithm(
     edge_bits=_beer_edge_bits,
     needs_batch0=True,
     setup=_choco_setup,
+    static_hp_fields=("comp_frac", "value_bits"),
 ))
 
 register(Algorithm(
@@ -614,4 +997,5 @@ register(Algorithm(
     edge_bits=_anq_edge_bits,
     needs_batch0=True,
     setup=lambda topo, hps, mixing, seed: {"q": qsgd(hps.qsgd_levels)},
+    static_hp_fields=("qsgd_levels",),  # quantizer wire format
 ))

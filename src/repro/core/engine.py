@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "make_scan_runner", "run_scan_loop", "history_from", "staleness_hist",
+    "make_scan_runner", "run_scan_loop", "run_batched", "history_from",
+    "staleness_hist",
 ]
 
 DEFAULT_CHUNK_SIZE = 32
@@ -77,9 +78,17 @@ class _Carry(NamedTuple):
     #                     the state, frozen by the same termination select
 
 
+def _sel(pred: jax.Array, t: jax.Array, f: jax.Array) -> jax.Array:
+    """jnp.where with `pred` broadcast from the *left*: a scalar pred
+    selects whole trees (single-lane runs), a [L] pred selects per lane
+    over [L, ...] leaves (batched runs)."""
+    p = pred.reshape(pred.shape + (1,) * (t.ndim - pred.ndim))
+    return jnp.where(p, t, f)
+
+
 def _tree_select(pred: jax.Array, on_true: object, on_false: object) -> object:
     return jax.tree_util.tree_map(
-        lambda t, f: jnp.where(pred, t, f), on_true, on_false
+        lambda t, f: _sel(pred, t, f), on_true, on_false
     )
 
 
@@ -93,6 +102,7 @@ def make_scan_runner(
     donate: bool = True,
     step_takes_index: bool = False,
     carries_aux: bool = False,
+    lanes: Optional[int] = None,
 ) -> Callable[..., Tuple[object, dict, dict]]:
     """Build a reusable chunked-scan driver.
 
@@ -104,6 +114,18 @@ def make_scan_runner(
     termination — the right denominator for wall-clock-per-step).  Compiled
     chunk executables are cached on the runner, so repeat runs with the
     same shapes skip compilation.
+
+    ``lanes=L`` turns the runner into the vmap-over-lanes batched engine:
+    ``step_fn`` is expected to be lane-batched (state leaves ``[L, m,
+    ...]``, per-step metric values of shape ``[L]`` — see
+    ``Algorithm.bind_batched``), ``objective_fn`` stays per-lane (it is
+    vmapped here over the lane axis of the node-mean parameters), the
+    std-termination rule runs per lane with the frozen-state select
+    applied lane-wise (a finished lane's state/aux stop moving while the
+    other lanes run on), and the chunk loop stops only when *every* lane
+    has fired.  ``metrics`` values then come back as ``[steps, L]``
+    arrays (untruncated — per-lane lengths live in ``info["steps_run"]``,
+    an ``[L]`` int array).  One traced program, one compile, S·C lanes.
 
     ``step_takes_index=True`` calls ``step_fn(state, batch, k)`` with the
     global step index as a traced i32 scalar — dynamic-network scenario
@@ -134,25 +156,29 @@ def make_scan_runner(
             new_state, metrics = step_fn(*step_args)
             new_aux = carry.aux
         if objective_fn is not None:
+            # node axis is 0 for single runs, 1 behind the lane axis
             mean_params = jax.tree_util.tree_map(
-                lambda x: x.mean(axis=0), params_of(new_state)
+                lambda x: x.mean(axis=0 if lanes is None else 1),
+                params_of(new_state),
             )
-            obj = objective_fn(mean_params).astype(jnp.float32)
-            win = jnp.concatenate([carry.win[1:], obj[None]])
+            obj_fn = objective_fn if lanes is None else jax.vmap(objective_fn)
+            obj = obj_fn(mean_params).astype(jnp.float32)  # [] or [L]
+            win = jnp.concatenate([carry.win[..., 1:], obj[..., None]], -1)
             # guard on steps into *this run* (k_rel), not the global index:
             # each run() starts a fresh zero window, and a k_start > 0 run
             # must still fill all three slots before the rule can fire.
-            trigger = (k_rel >= 2) & (jnp.std(win) < tol_std)
+            trigger = (k_rel >= 2) & (jnp.std(win, axis=-1) < tol_std)
         else:
             obj = None
             win = carry.win
-            trigger = jnp.zeros((), bool)
+            trigger = jnp.zeros((() if lanes is None else (lanes,)), bool)
         # A step that runs *after* the rule fired is a no-op: keep the frozen
-        # state so the returned state is exactly the triggering step's.
+        # state so the returned state is exactly the triggering step's (per
+        # lane, when batched).
         frozen = carry.done
         out_state = _tree_select(frozen, carry.state, new_state)
         out_aux = _tree_select(frozen, carry.aux, new_aux)
-        out_win = jnp.where(frozen, carry.win, win)
+        out_win = _sel(frozen, carry.win, win)
         done = carry.done | trigger
         ys = dict(metrics)
         if obj is not None:
@@ -203,8 +229,10 @@ def make_scan_runner(
             )
         carry = _Carry(
             state=state,
-            done=jnp.zeros((), bool),
-            win=jnp.zeros((3,), jnp.float32),
+            done=jnp.zeros((() if lanes is None else (lanes,)), bool),
+            win=jnp.zeros(
+                ((3,) if lanes is None else (lanes, 3)), jnp.float32
+            ),
             aux=aux,
         )
         leaves0, treedef0 = None, None
@@ -244,21 +272,35 @@ def make_scan_runner(
             ys_chunks.append(ys)
             k0 += length
             # one scalar sync per chunk boundary — the only mid-run readback
-            if objective_fn is not None and bool(jax.device_get(carry.done)):
+            # (batched runs stop once *every* lane's rule has fired)
+            if objective_fn is not None and bool(
+                jax.device_get(carry.done.all())
+            ):
                 break
         if not ys_chunks:
+            zero_steps = 0 if lanes is None else np.zeros(lanes, np.int64)
             return carry.state, {}, {
-                "steps_run": 0, "steps_dispatched": 0, "aux": carry.aux,
+                "steps_run": zero_steps, "steps_dispatched": 0,
+                "aux": carry.aux,
             }
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs), *ys_chunks
         )
         host = jax.device_get(stacked)  # single bulk readback of all metrics
-        stopped = host.pop("_stopped")
-        steps_run = (
-            int(np.argmax(stopped)) + 1 if stopped.any() else int(len(stopped))
-        )
-        metrics = {key: val[:steps_run] for key, val in host.items()}
+        stopped = host.pop("_stopped")  # [steps] or [steps, L]
+        if lanes is None:
+            steps_run = (
+                int(np.argmax(stopped)) + 1 if stopped.any()
+                else int(len(stopped))
+            )
+            metrics = {key: val[:steps_run] for key, val in host.items()}
+        else:
+            fired = stopped.any(axis=0)  # [L]
+            steps_run = np.where(
+                fired, np.argmax(stopped, axis=0) + 1, len(stopped)
+            ).astype(np.int64)
+            # per-lane lengths differ; hand back the full [steps, L] buffers
+            metrics = dict(host)
         return carry.state, metrics, {
             "steps_run": steps_run,
             "steps_dispatched": k0 - k_start,
@@ -293,5 +335,48 @@ def run_scan_loop(
         donate=donate,
         step_takes_index=step_takes_index,
         carries_aux=carries_aux,
+    )
+    return runner(state, batch_fn, num_steps, aux=aux)
+
+
+def run_batched(
+    step_fn: Callable,   # lane-batched: state leaves [L, m, ...], metrics [L]
+    state: object,
+    batch_fn: Callable[[int], object],
+    num_steps: int,
+    *,
+    lanes: int,
+    objective_fn: Optional[Callable] = None,
+    params_of: Callable = lambda s: s.params,
+    tol_std: float = 1e-3,
+    chunk_size: int = DEFAULT_CHUNK_SIZE,
+    donate: bool = True,
+    step_takes_index: bool = False,
+    carries_aux: bool = False,
+    aux: object = None,
+) -> Tuple[object, dict, dict]:
+    """One-shot batched (vmap-over-lanes) scan run.
+
+    The lane axis — S seeds × C hyperparameter configs, flattened — is
+    threaded through the scan carry (state, aux, per-lane termination
+    window) so the whole sweep is ONE jitted program: one compile, one
+    dispatch stream, per-lane metric buffers coming back as ``[steps,
+    L]`` arrays with per-lane ``info["steps_run"]``.  ``step_fn`` must
+    already be lane-batched; ``Algorithm.bind_batched`` builds one from
+    any registered algorithm (per-lane PRNG folds via per-lane state
+    keys, per-lane hyperparameters as traced scalars).
+    ``objective_fn`` remains the per-run callable — it is vmapped over
+    the lane axis of the node-mean parameters here.
+    """
+    runner = make_scan_runner(
+        step_fn,
+        objective_fn=objective_fn,
+        params_of=params_of,
+        tol_std=tol_std,
+        chunk_size=chunk_size,
+        donate=donate,
+        step_takes_index=step_takes_index,
+        carries_aux=carries_aux,
+        lanes=lanes,
     )
     return runner(state, batch_fn, num_steps, aux=aux)

@@ -9,6 +9,30 @@ Metropolis weights in [m, max_degree+1] form (`Topology.mixing_padded`),
 O(m·deg·n), plus the variants the baselines need (lazy B−I for BEER,
 (I+B)/2 for NIDS, the off-diagonal/diagonal split for quantized NIDS).
 
+All padded-form gossip — static mixers, per-step scenario mixers, the
+temporal/stale path, and PaME's partial exchange (`repro.core.pme`) —
+routes through ONE neighbor-contraction core, `gather_terms`, with two
+interchangeable implementations:
+
+  * impl="slots"  — one gather + multiply-add per neighbor slot,
+    accumulated sequentially in ascending slot order (unrolled under
+    `_UNROLL_MAX_SLOTS`, `lax.scan` beyond).  XLA fuses the chain into a
+    single pass over the output, which makes this the fastest form on
+    CPU, and the sequential order is what the "dense"/"sparse"
+    bit-identity guarantee below is predicated on.
+  * impl="segsum" — the padded table is flattened once into an [m·k]
+    edge list and each term is aggregated with two gathers plus one
+    `jax.ops.segment_sum` over receiver-id segments (padding slots are
+    routed to a dead segment and discarded).  The traced program is O(1)
+    ops regardless of the degree — the form that scales on TPU/GPU where
+    scatter-add is parallel.  Results agree with "slots" to fp tolerance
+    only (different reduction order).
+
+The default is backend-gated (`default_impl`): "slots" on CPU — where
+XLA serializes scatter and the fused chain wins at every degree — and
+"segsum" elsewhere; override per call, per `Mixer`, or process-wide with
+the `REPRO_GOSSIP_IMPL` environment variable.
+
 Three `Mixer` modes:
 
   * "sparse" — padded gather over N_i ∪ {i}; the default for the
@@ -18,26 +42,24 @@ Three `Mixer` modes:
     [m, m] connectivity (non-edges carry weight exactly 0.0).  Because a
     0.0 contribution is an exact IEEE no-op and both modes sum the real
     terms in the same ascending order, "dense" and "sparse" are
-    bit-identical — the property the equivalence tests pin.
+    bit-identical under impl="slots" — the property the equivalence
+    tests pin (impl="segsum" agrees to fp tolerance instead).
   * "matrix" — the legacy dense einsum (`jnp.einsum("ji,j...->i...")`).
     What raw `[m, m]` array call sites get via `as_mixer`; kept as the
     BLAS-backed reference and the "dense" column of `bench_mixing`.
-
-Sequential slot accumulation (unrolled under ~16 slots, `lax.scan`
-beyond) keeps the floating-point order independent of the slot count, so
-the "dense"/"sparse" bit-identity holds on any backend.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Union
+import os
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "PaddedMixing", "Mixer", "mix_padded", "make_mixer", "as_mixer",
-    "ring_gather",
+    "ring_gather", "gather_terms", "default_impl",
 ]
 
 # Above this many slots the per-slot python unroll is replaced by a
@@ -47,6 +69,24 @@ __all__ = [
 # only holds below this threshold — tests and the "dense" escape hatch
 # stay under it; tolerance-level equivalence holds regardless.
 _UNROLL_MAX_SLOTS = 128
+
+
+def default_impl() -> str:
+    """Resolve the gossip contraction implementation for this process.
+
+    `REPRO_GOSSIP_IMPL` (= "slots" | "segsum") wins; otherwise "slots" on
+    CPU (XLA serializes scatter there — measured 10–60× slower than the
+    fused chain at every degree) and "segsum" on accelerators (O(1)
+    traced ops, parallel scatter-add).
+    """
+    env = os.environ.get("REPRO_GOSSIP_IMPL")
+    if env:
+        if env not in ("slots", "segsum"):
+            raise ValueError(
+                f"REPRO_GOSSIP_IMPL={env!r}; expected 'slots' or 'segsum'"
+            )
+        return env
+    return "slots" if jax.default_backend() == "cpu" else "segsum"
 
 
 class PaddedMixing(NamedTuple):
@@ -67,6 +107,12 @@ class PaddedMixing(NamedTuple):
     nbrs: jax.Array     # [m, k] int32
     w: jax.Array        # [m, k] float32
     is_self: jax.Array  # [m, k] bool
+    pad: Optional[jax.Array] = None  # [m, k] bool — structural padding
+    #                                  slots (weight exactly 0.0); lets the
+    #                                  segment-sum path route them to a
+    #                                  dead segment instead of trusting the
+    #                                  zero weight.  None = no padding info
+    #                                  (e.g. the full-connectivity form).
 
     @property
     def m(self) -> int:
@@ -78,7 +124,7 @@ class PaddedMixing(NamedTuple):
         return jnp.sum(jnp.where(self.is_self, self.w, 0.0), axis=1)
 
     def with_weights(self, w: jax.Array) -> "PaddedMixing":
-        return PaddedMixing(self.nbrs, w, self.is_self)
+        return PaddedMixing(self.nbrs, w, self.is_self, self.pad)
 
 
 def _bcast(v: jax.Array, x: jax.Array) -> jax.Array:
@@ -86,30 +132,112 @@ def _bcast(v: jax.Array, x: jax.Array) -> jax.Array:
     return v.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
 
 
-def _leaf_mix_padded(pm: PaddedMixing, x: jax.Array) -> jax.Array:
-    k = pm.nbrs.shape[1]
+def _gather_terms_slots(
+    nbrs: jax.Array, terms: Sequence[Tuple[jax.Array, jax.Array]]
+) -> Tuple[jax.Array, ...]:
+    """Fused per-slot chain: one gather + multiply-add per slot per term,
+    sequential in ascending slot order (bit-stable across padding)."""
+    k = nbrs.shape[1]
     if k <= _UNROLL_MAX_SLOTS:
-        acc = _bcast(pm.w[:, 0], x) * x[pm.nbrs[:, 0]]
+        accs = tuple(
+            _bcast(w[:, 0], x) * x[nbrs[:, 0]] for w, x in terms
+        )
         for slot in range(1, k):
-            acc = acc + _bcast(pm.w[:, slot], x) * x[pm.nbrs[:, slot]]
-        return acc
+            j = nbrs[:, slot]
+            accs = tuple(
+                acc + _bcast(w[:, slot], x) * x[j]
+                for acc, (w, x) in zip(accs, terms)
+            )
+        return accs
 
-    def body(acc, slot):
-        nb, wk = slot
-        return acc + _bcast(wk, x) * x[nb], None
+    def body(accs, slot):
+        j, ws = slot[0], slot[1:]
+        return tuple(
+            acc + _bcast(wk, x) * x[j]
+            for acc, wk, (_, x) in zip(accs, ws, terms)
+        ), None
 
-    acc, _ = jax.lax.scan(body, jnp.zeros_like(x), (pm.nbrs.T, pm.w.T))
-    return acc
+    init = tuple(jnp.zeros_like(x) for _, x in terms)
+    xs = (nbrs.T,) + tuple(w.T for w, _ in terms)
+    accs, _ = jax.lax.scan(body, init, xs)
+    return accs
 
 
-def mix_padded(pm: PaddedMixing, tree: object) -> object:
+def _gather_terms_segsum(
+    nbrs: jax.Array,
+    terms: Sequence[Tuple[jax.Array, jax.Array]],
+    pad: Optional[jax.Array],
+) -> Tuple[jax.Array, ...]:
+    """Edge-list segment-sum: flatten the padded table to an [m·k] edge
+    list once, then per term two gathers (sender values, flat weights) +
+    one `jax.ops.segment_sum` over receiver-id segments.  Padding slots
+    are routed to a dead segment m and sliced away, so poisoned padding
+    values can never leak into a real receiver row."""
+    m, k = nbrs.shape
+    senders = nbrs.reshape(-1)
+    rows = jnp.broadcast_to(
+        jnp.arange(m, dtype=jnp.int32)[:, None], (m, k)
+    )
+    if pad is None:
+        recv = rows.reshape(-1)
+        num_segments, sorted_ids = m, True
+    else:
+        recv = jnp.where(pad, m, rows).reshape(-1)
+        num_segments, sorted_ids = m + 1, False
+    outs = []
+    for w, x in terms:
+        vals = _bcast(w.reshape(-1), x) * x[senders]
+        seg = jax.ops.segment_sum(
+            vals, recv, num_segments=num_segments,
+            indices_are_sorted=sorted_ids,
+        )
+        outs.append(seg[:m])
+    return tuple(outs)
+
+
+def gather_terms(
+    nbrs: jax.Array,                                  # [m, k] padded table
+    terms: Sequence[Tuple[jax.Array, jax.Array]],     # ([m, k] w, [m, ...] x)
+    *,
+    pad: Optional[jax.Array] = None,                  # [m, k] padding slots
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, ...]:
+    """One-pass neighbor contraction shared by every padded gossip path.
+
+    For each (w, x) term returns out_i = sum_slot w[i, slot] ·
+    x[nbrs[i, slot]].  Multiple terms ride the same slot walk (PME needs
+    payload *and* mask counts per exchange), so the neighbor table is
+    traversed once however many aggregates are needed.
+
+    impl="slots" is the sequential fused chain (CPU default, bit-stable
+    slot order); impl="segsum" flattens to an [m·k] edge list and
+    aggregates with `jax.ops.segment_sum` per term — O(1) traced ops at
+    any degree, padding routed to a dead segment (accelerator default).
+    See `default_impl`.
+    """
+    impl = default_impl() if impl is None else impl
+    if impl == "slots":
+        return _gather_terms_slots(nbrs, terms)
+    if impl == "segsum":
+        return _gather_terms_segsum(nbrs, terms, pad)
+    raise ValueError(f"unknown gossip impl {impl!r}")
+
+
+def mix_padded(pm: PaddedMixing, tree: object, impl: Optional[str] = None) -> object:
     """Gossip out_i = sum_slot w[i,slot] · x[nbrs[i,slot]] for every leaf.
 
-    O(m·k·n) gathers + multiply-adds instead of the O(m²·n) dense einsum;
-    the per-slot accumulation order is ascending sender id, independent of
-    the padding, so sparse and full-connectivity padded forms agree bitwise.
+    O(m·k·n) data movement instead of the O(m²·n) dense einsum, through
+    the shared `gather_terms` core.  Under impl="slots" the accumulation
+    order is ascending sender id independent of padding, so sparse and
+    full-connectivity padded forms agree bitwise; impl="segsum" agrees to
+    fp tolerance.
     """
-    return jax.tree_util.tree_map(lambda x: _leaf_mix_padded(pm, x), tree)
+    return jax.tree_util.tree_map(
+        lambda x: gather_terms(
+            pm.nbrs, [(pm.w, x)], pad=pm.pad, impl=impl
+        )[0],
+        tree,
+    )
 
 
 def ring_gather(
@@ -155,12 +283,14 @@ class Mixer:
     required by the "matrix"/"dense" modes but may be None for "sparse"
     mixers built per step inside a traced scenario step, where
     materializing [m, m] would defeat the padded form.  `pm` is the padded
-    form used by the "dense"/"sparse" modes.
+    form used by the "dense"/"sparse" modes.  `impl` picks the neighbor
+    contraction ("slots" | "segsum" | None = `default_impl`).
     """
 
     mode: str                       # "matrix" | "dense" | "sparse"
     b: Optional[jax.Array]          # [m, m], or None for per-step sparse
     pm: Optional[PaddedMixing] = None
+    impl: Optional[str] = None      # gossip contraction implementation
 
     @property
     def m(self) -> int:
@@ -173,7 +303,7 @@ class Mixer:
                 lambda x: jnp.einsum("ji,j...->i...", self.b.astype(x.dtype), x),
                 tree,
             )
-        return mix_padded(self.pm, tree)
+        return mix_padded(self.pm, tree, impl=self.impl)
 
     def mix_lazy(self, tree: object) -> object:
         """(B − I) x — the gossip increment used by BEER."""
@@ -183,7 +313,7 @@ class Mixer:
                 lambda x: jnp.einsum("ji,j...->i...", w.astype(x.dtype), x), tree
             )
         return jax.tree_util.tree_map(
-            lambda mx, x: mx - x, mix_padded(self.pm, tree), tree
+            lambda mx, x: mx - x, mix_padded(self.pm, tree, impl=self.impl), tree
         )
 
     def mix_half(self, tree: object) -> object:
@@ -196,7 +326,7 @@ class Mixer:
             )
         return jax.tree_util.tree_map(
             lambda mx, x: 0.5 * (mx + x).astype(x.dtype),
-            mix_padded(self.pm, tree), tree,
+            mix_padded(self.pm, tree, impl=self.impl), tree,
         )
 
     def mix_nids_quantized(self, hats: object, u: object) -> object:
@@ -213,7 +343,7 @@ class Mixer:
                 hats, u,
             )
         sw = self.pm.self_weight  # B_ii
-        mixed = mix_padded(self.pm, hats)
+        mixed = mix_padded(self.pm, hats, impl=self.impl)
 
         def one(mx, h, ue):
             return (0.5 * (mx - _bcast(sw, h) * h)
@@ -222,24 +352,31 @@ class Mixer:
         return jax.tree_util.tree_map(one, mixed, hats, u)
 
 
-def make_mixer(topo, mode: str = "sparse") -> Mixer:
+def make_mixer(topo, mode: str = "sparse", impl: Optional[str] = None) -> Mixer:
     """Build a Mixer from a `repro.core.topology.Topology`.
 
     mode="sparse" gathers over N_i ∪ {i} (O(m·deg·n)); mode="dense" runs
-    the same gather over full connectivity (bit-identical to "sparse");
-    mode="matrix" is the legacy dense einsum.
+    the same gather over full connectivity (bit-identical to "sparse"
+    under impl="slots"); mode="matrix" is the legacy dense einsum.
+    `impl` picks the neighbor contraction ("slots" | "segsum"; None =
+    `default_impl`).
     """
     b = jnp.asarray(topo.mixing)
     if mode == "matrix":
         return Mixer("matrix", b)
     if mode == "dense":
-        return Mixer("dense", b, _dense_padded(b))
+        return Mixer("dense", b, _dense_padded(b), impl)
     if mode != "sparse":
         raise ValueError(f"unknown mixing mode {mode!r}")
     nbrs, w, is_self = topo.mixing_padded()
+    nbrs = jnp.asarray(nbrs)
+    is_self = jnp.asarray(is_self)
+    # padding slots repeat the row's own id without being the self slot
+    pad = (nbrs == jnp.arange(nbrs.shape[0])[:, None]) & ~is_self
     return Mixer(
         "sparse", b,
-        PaddedMixing(jnp.asarray(nbrs), jnp.asarray(w), jnp.asarray(is_self)),
+        PaddedMixing(nbrs, jnp.asarray(w), is_self, pad),
+        impl,
     )
 
 

@@ -149,7 +149,8 @@ def pame_step(
         )
         n_messages = jnp.sum(sel.astype(jnp.int32))
         v_bar = pme.pme_average_pytree_padded(
-            k_mask, state.params, topo.nbrs, sel, cfg.p, mode=cfg.mask_mode
+            k_mask, state.params, topo.nbrs, sel, cfg.p, mode=cfg.mask_mode,
+            pad=~topo.valid,
         )
     else:
         a = pme.sample_neighbor_selection(

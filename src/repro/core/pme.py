@@ -41,10 +41,6 @@ __all__ = [
 # kernel (kernels.pme_average); smaller ones stay on the plain einsum.
 _KERNEL_MIN_ELEMS = 1 << 17
 
-# padded PME unrolls one gather+mul+add per neighbor slot; above this
-# degree it switches to a lax.scan over slots (mirrors core.mixing).
-_UNROLL_MAX_SLOTS = 128
-
 
 def sample_coordinate_masks(
     key: jax.Array,
@@ -132,12 +128,17 @@ def sample_neighbor_selection(
     sel = sample_neighbor_selection_padded(
         key, nbrs, valid, t, comm_mask, survivors=survivors
     )
-    # scatter into dense A: receiver on columns.
-    onehot = jax.nn.one_hot(nbrs, m, dtype=jnp.float32)  # [m, d, m] sender id
-    a_rows_by_receiver = jnp.einsum(
-        "idm,id->im", onehot, sel.astype(jnp.float32)
-    )  # [receiver, sender]
-    return a_rows_by_receiver.T  # A[sender, receiver]
+    # edge-list scatter into dense A[sender, receiver]: m·d scalar adds
+    # instead of the old [m, d, m] one-hot einsum, whose O(m²·d) operand
+    # dominated memory at large m.  Padding slots scatter sel=False (0.0)
+    # onto A[i, i], an additive no-op (a node is never its own neighbor,
+    # so the true diagonal is 0).
+    rows = jnp.broadcast_to(jnp.arange(m, dtype=nbrs.dtype)[:, None], (m, d))
+    return (
+        jnp.zeros((m, m), jnp.float32)
+        .at[nbrs, rows]
+        .add(sel.astype(jnp.float32))
+    )
 
 
 def pme_average(
@@ -236,17 +237,23 @@ def pme_average_pytree_padded(
     sel: jax.Array,   # [m, d] bool — sample_neighbor_selection_padded output
     p: float,
     mode: str = "bernoulli",
+    pad: Optional[jax.Array] = None,  # [m, d] bool — structural padding
+    impl: Optional[str] = None,       # gossip contraction (see core.mixing)
 ) -> object:
     """PME applied leaf-wise through the padded neighbor-exchange form.
 
     Same estimator as `pme_average_pytree` with a dense selection matrix —
     v_bar[i, l] = sum over selected neighbors of masked w[j, l] / count,
     falling back to w[i, l] where the count is zero — but the node-axis
-    contraction is a gather over the d = max_degree slots: O(m·deg·n)
-    instead of the O(m²·n) einsum.  Coordinate masks are drawn exactly as
-    in the dense path (fold_in per leaf), so the two agree to fp tolerance
-    for the same key.
+    contraction runs through the shared `repro.core.mixing.gather_terms`
+    core over the d = max_degree slots: O(m·deg·n) instead of the
+    O(m²·n) einsum, with the payload sum and the lambda_{i,l} coordinate
+    counts aggregated in one slot walk (two gathers per slot).
+    Coordinate masks are drawn exactly as in the dense path (fold_in per
+    leaf), so the two agree to fp tolerance for the same key.
     """
+    from repro.core.mixing import gather_terms
+
     leaves, treedef = jax.tree_util.tree_flatten(params)
     m, d = nbrs.shape
     sel_f = sel.astype(jnp.float32)
@@ -266,27 +273,11 @@ def pme_average_pytree_padded(
             flat = leaf
             payload = flat * masks.astype(flat.dtype)
             mask_f = masks.astype(jnp.float32)
-        agg = jnp.zeros(payload.shape, jnp.float32)
-        cnt = jnp.zeros(payload.shape, jnp.float32)
-        if d <= _UNROLL_MAX_SLOTS:
-            for slot in range(d):
-                j = nbrs[:, slot]
-                s_k = sel_f[:, slot].reshape((-1,) + (1,) * (payload.ndim - 1))
-                agg = agg + s_k * payload[j].astype(jnp.float32)
-                cnt = cnt + s_k * mask_f[j]
-        else:
-            # high-degree graphs: scan over slots instead of unrolling
-            # d gather+mul+add triples into the traced program
-            def body(carry, slot):
-                agg_, cnt_ = carry
-                j, s_col = slot
-                s_k = s_col.reshape((-1,) + (1,) * (payload.ndim - 1))
-                return (agg_ + s_k * payload[j].astype(jnp.float32),
-                        cnt_ + s_k * mask_f[j]), None
-
-            (agg, cnt), _ = jax.lax.scan(
-                body, (agg, cnt), (nbrs.T, sel_f.T)
-            )
+        agg, cnt = gather_terms(
+            nbrs,
+            [(sel_f, payload.astype(jnp.float32)), (sel_f, mask_f)],
+            pad=pad, impl=impl,
+        )
         avg = jnp.where(
             cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(flat.dtype), flat
         )

@@ -296,13 +296,16 @@ def realization_matrix(arrays: ScenarioArrays, r: Realization) -> jax.Array:
 
 
 def scenario_mixer(
-    arrays: ScenarioArrays, r: Realization, mode: str = "sparse"
+    arrays: ScenarioArrays, r: Realization, mode: str = "sparse",
+    impl: Optional[str] = None,
 ) -> Mixer:
     """Wrap one step's realization as a gossip `Mixer`.
 
     Constructed inside the traced step — per-step weights only, the
     neighbor table stays static, so this is scan/vmap-safe with no host
-    round-trips.  "sparse" gathers over the padded slots (O(m·deg·n));
+    round-trips.  "sparse" gathers over the padded slots (O(m·deg·n))
+    through the shared `repro.core.mixing.gather_terms` core (`impl`
+    picks "slots"/"segsum"; None = backend default);
     "dense"/"matrix" materialize the [m, m] realized matrix.
 
     Slot layout is neighbors-then-self (`ScenarioArrays`), not the
@@ -312,11 +315,15 @@ def scenario_mixer(
     conformance tests compare with tolerance accordingly).
     """
     if mode == "sparse":
-        pm = PaddedMixing(arrays.nbrs_full, r.weights, arrays.is_self)
-        return Mixer("sparse", None, pm)
+        # structural padding of the base table; the self slot is real
+        pad = jnp.concatenate(
+            [~arrays.valid, jnp.zeros((arrays.m, 1), bool)], axis=1
+        )
+        pm = PaddedMixing(arrays.nbrs_full, r.weights, arrays.is_self, pad)
+        return Mixer("sparse", None, pm, impl)
     b = realization_matrix(arrays, r)
     if mode == "dense":
-        return Mixer("dense", b, _dense_padded(b))
+        return Mixer("dense", b, _dense_padded(b), impl)
     if mode == "matrix":
         return Mixer("matrix", b)
     raise ValueError(f"unknown scenario mixing mode {mode!r}")

@@ -156,18 +156,29 @@ def build_everything(args):
         return jax.value_and_grad(lambda pp: train_loss(pp, cfg, b))(p)
 
     alg = get_algorithm(args.algo)
-    bound = alg.bind(
-        grad_fn, topo, _hps_from_args(args.algo, args),
-        mixing=args.mixing, seed=args.seed,
-        scenario=_scenario_from_args(args),
-    )
-
+    hps = _hps_from_args(args.algo, args)
+    scen = _scenario_from_args(args)
     params0 = init_params(jax.random.PRNGKey(args.seed), cfg)
-    stacked = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
-    )
     batch0 = make_batch(0) if alg.needs_batch0 else None
-    state = bound.init(jax.random.PRNGKey(args.seed + 1), stacked, batch0)
+    if args.seeds > 1:
+        # vmap-over-lanes batched run: one jitted scan trains all seed
+        # replicas together (lane s starts from PRNGKey(seed + 1 + s),
+        # the key the unbatched run for that seed would use)
+        bound = alg.bind_batched(
+            grad_fn, topo, [hps],
+            seeds=[args.seed + 1 + i for i in range(args.seeds)],
+            mixing=args.mixing, seed=args.seed, scenario=scen,
+        )
+        state = bound.init(params0, m, batch0)
+    else:
+        bound = alg.bind(
+            grad_fn, topo, hps,
+            mixing=args.mixing, seed=args.seed, scenario=scen,
+        )
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
+        )
+        state = bound.init(jax.random.PRNGKey(args.seed + 1), stacked, batch0)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params0))
     return cfg, bound, state, make_batch, n_params
 
@@ -208,6 +219,10 @@ def main() -> None:
                          "steps (0 = off)")
     ap.add_argument("--mobility-keep", type=float, default=0.7,
                     help="P[base edge active within a mobility epoch]")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="train N seed replicas as lanes of ONE batched "
+                         "jitted scan (vmap-over-lanes engine); the log "
+                         "reports mean loss ± std across lanes")
     ap.add_argument("--chunk", type=int, default=16,
                     help="steps per scan dispatch (engine chunk length)")
     ap.add_argument("--lr", type=float, default=0.05, help="baseline step size")
@@ -226,12 +241,14 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg, bound, state, make_batch, n_params = build_everything(args)
+    lanes = bound.lanes if args.seeds > 1 else None
     wire_per_step = bound.wire_bits(n_params)
     scen_tag = bound.scenario.name if bound.dynamic else "static"
     print(
         f"[train] algo={args.algo} mixing={args.mixing} nodes={args.nodes} "
         f"scenario={scen_tag} "
-        f"params={n_params/1e6:.2f}M wire_bits/step={wire_per_step:.3e} "
+        + (f"seeds={args.seeds} (batched lanes) " if lanes else "")
+        + f"params={n_params/1e6:.2f}M wire_bits/step={wire_per_step:.3e} "
         f"({wire_per_step/8e6:.2f} MB/step network-wide"
         f"{'; full graph — realized bits logged per step' if bound.dynamic else ''})",
         flush=True,
@@ -250,7 +267,7 @@ def main() -> None:
 
     runner = engine.make_scan_runner(
         bound.step, chunk_size=args.chunk, step_takes_index=bound.dynamic,
-        carries_aux=bound.temporal,
+        carries_aux=bound.temporal, lanes=lanes,
     )
     # the temporal carry (Markov chain state + staleness ring) threads
     # through the scan and across chunk dispatches; it is not checkpointed,
@@ -275,25 +292,32 @@ def main() -> None:
         aux = info["aux"]
         k += info["steps_dispatched"]
         if "wire_bits" in metrics:  # realized (surviving-edge) accounting
-            cum_bits += float(np.sum(metrics["wire_bits"]))
+            # batched rows are [steps, L]: report the per-lane average so
+            # the log stays comparable with a single-seed run
+            cum_bits += float(np.sum(metrics["wire_bits"])) / (lanes or 1)
         else:
             cum_bits += wire_per_step * info["steps_dispatched"]
         if "stale_hist" in metrics:  # per-run staleness occupancy histogram
-            row = np.asarray(engine.staleness_hist(metrics["stale_hist"]))
+            rows = np.asarray(metrics["stale_hist"])
+            row = rows.reshape(-1, rows.shape[-1]).sum(axis=0)
             stale_hist = row if stale_hist is None else stale_hist + row
         if (k // log_every) != (k0 // log_every) or k >= args.steps:
-            loss = float(np.mean(metrics["loss_mean"]))
+            lm = np.asarray(metrics["loss_mean"])
+            loss = float(np.mean(lm))
             extra = ""
+            if lanes:  # spread of the seed replicas at the last step
+                extra += f" loss_std={float(np.std(lm[-1])):.4f}"
+            last = lambda key: float(np.mean(np.asarray(metrics[key])[-1]))
             if "consensus" in metrics:
-                extra += f" consensus={float(metrics['consensus'][-1]):.3e}"
+                extra += f" consensus={last('consensus'):.3e}"
             if "comm_nodes" in metrics:
-                extra += f" comm_nodes={int(metrics['comm_nodes'][-1])}"
+                extra += f" comm_nodes={last('comm_nodes'):.0f}"
             if "alive_nodes" in metrics:
-                extra += f" alive={int(metrics['alive_nodes'][-1])}"
+                extra += f" alive={last('alive_nodes'):.0f}"
             if "stale_nodes" in metrics:
-                extra += f" stale={int(metrics['stale_nodes'][-1])}"
+                extra += f" stale={last('stale_nodes'):.0f}"
             if "sigma_mean" in metrics:
-                extra += f" sigma={float(metrics['sigma_mean'][-1]):.2f}"
+                extra += f" sigma={last('sigma_mean'):.2f}"
             print(
                 f"[train] step={k} loss={loss:.4f}{extra}"
                 f" wire_gbits={cum_bits/1e9:.4f}"

@@ -1,0 +1,449 @@
+"""Batched (vmap-over-lanes) sweep engine + edge-list gossip core.
+
+Lane-equivalence contract: lane (s, c) of a `bind_batched` grid must
+reproduce the unbatched `bind(hps_c)` run under `PRNGKey(s)` to fp
+tolerance — allclose, NOT bitwise: the batched program is a different XLA
+program, and LLVM's FMA contraction makes cross-program bit-identity
+non-robust (see tests/test_mixing.py for the discussion; the bitwise
+guarantees in this repo are always same-program or op-by-op eager).
+
+Gossip-core contract: impl="segsum" (edge-list + `jax.ops.segment_sum`,
+padding routed to a dead segment) agrees with impl="slots" (the fused
+sequential chain) to fp tolerance on every graph, including the
+degenerate ones — isolated node, star hub, m=2 — and ignores poisoned
+padding weights outright.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core import baselines as B
+from repro.core import engine
+from repro.core.mixing import PaddedMixing, gather_terms, make_mixer, mix_padded
+from repro.core.pame import PaMEConfig
+from repro.core.scenarios import Scenario
+from repro.core.temporal import TemporalScenario
+from repro.core.topology import build_topology
+
+
+def _linreg(m, n, spn=24, seed=0):
+    rng = np.random.default_rng(seed)
+    w_star = rng.standard_normal(n)
+    a = rng.standard_normal((m, spn, n))
+    y = a @ w_star + 0.3 * rng.standard_normal((m, spn))
+    a_j, y_j = jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32)
+
+    def grad_fn(w, batch, key):
+        aa, yy = batch
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    def objective(w):
+        r = jnp.einsum("mbn,n->mb", a_j, w) - y_j
+        return jnp.sum(0.5 * jnp.mean(r**2, axis=1))
+
+    return (a_j, y_j), grad_fn, objective
+
+
+GRIDS = {
+    "pame": [
+        PaMEConfig(nu=0.3, p=0.3, gamma=1.01, sigma0=8.0),
+        PaMEConfig(nu=0.6, p=0.3, gamma=1.05, sigma0=4.0),
+    ],
+    "dpsgd": [ALG.DPSGDHp(lr=0.1), ALG.DPSGDHp(lr=0.05)],
+    "dfedsam": [
+        ALG.DFedSAMHp(lr=0.1, rho=0.01), ALG.DFedSAMHp(lr=0.05, rho=0.05)
+    ],
+    "choco": [
+        ALG.ChocoHp(lr=0.05, gossip_gamma=0.3),
+        ALG.ChocoHp(lr=0.02, gossip_gamma=0.5),
+    ],
+    "beer": [ALG.BeerHp(lr=0.05), ALG.BeerHp(lr=0.02)],
+    "anq_nids": [ALG.AnqNidsHp(lr=0.1), ALG.AnqNidsHp(lr=0.05)],
+}
+
+
+@pytest.mark.parametrize("name", sorted(GRIDS))
+def test_lane_matches_unbatched_run(name):
+    """Per registered algorithm: every lane of a 2-config × 2-seed batched
+    grid reproduces the unbatched run with the same seed/config."""
+    m, n = 8, 24
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn, objective = _linreg(m, n)
+    hps = GRIDS[name]
+    ba = ALG.get_algorithm(name).bind_batched(
+        grad_fn, topo, hps, seeds=[0, 1]
+    )
+    assert ba.lanes == 4
+    state, hist = ba.run(
+        jnp.zeros(n), m, lambda k: batch, 12,
+        objective_fn=objective, tol_std=0.0, chunk_size=6,
+    )
+    assert hist["objective"].shape == (12, 4)
+    params = np.asarray(ba.params_of(state))
+    for lane in range(ba.lanes):
+        c = int(hist["lane_config"][lane])
+        s = int(hist["lane_seed"][lane])
+        bound = ALG.get_algorithm(name).bind(grad_fn, topo, hps[c])
+        st, h = bound.run(
+            jax.random.PRNGKey(s), jnp.zeros(n), m, lambda k: batch, 12,
+            objective_fn=objective, tol_std=0.0, chunk_size=6,
+        )
+        np.testing.assert_allclose(
+            hist["objective"][:, lane], h["objective"],
+            rtol=5e-5, atol=1e-6, err_msg=f"lane {lane} (cfg {c}, seed {s})",
+        )
+        np.testing.assert_allclose(
+            params[lane], np.asarray(bound.params_of(st)),
+            rtol=5e-5, atol=1e-6,
+        )
+
+
+def test_per_lane_termination_freezes_each_lane():
+    """The std rule fires per lane; a finished lane's state stays frozen at
+    its own stopping step while slower lanes run on."""
+    m, n = 8, 24
+    topo = build_topology("complete", m)
+    batch, grad_fn, objective = _linreg(m, n, seed=3)
+    # aggressive vs timid penalty growth => very different stopping steps
+    hps = [
+        PaMEConfig(nu=0.5, p=0.5, gamma=1.05, sigma0=8.0),
+        PaMEConfig(nu=0.5, p=0.5, gamma=1.001, sigma0=0.5),
+    ]
+    ba = ALG.get_algorithm("pame").bind_batched(grad_fn, topo, hps, seeds=[0])
+    state, hist = ba.run(
+        jnp.zeros(n), m, lambda k: batch, 400,
+        objective_fn=objective, tol_std=1e-3, chunk_size=25,
+    )
+    steps_run = hist["steps_run"]
+    assert steps_run[0] != steps_run[1]
+    params = np.asarray(ba.params_of(state))
+    for lane, cfg in enumerate(hps):
+        bound = ALG.get_algorithm("pame").bind(grad_fn, topo, cfg)
+        st, h = bound.run(
+            jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 400,
+            objective_fn=objective, tol_std=1e-3, chunk_size=25,
+        )
+        assert h["steps_run"] == int(steps_run[lane])
+        np.testing.assert_allclose(
+            params[lane], np.asarray(bound.params_of(st)),
+            rtol=5e-5, atol=1e-6,
+        )
+    finals = ALG.lane_finals(hist)
+    assert np.isfinite(finals).all()
+
+
+def test_bind_batched_refuses_trace_shaping_fields():
+    m, n = 6, 12
+    topo = build_topology("ring", m)
+    batch, grad_fn, _ = _linreg(m, n)
+    with pytest.raises(ValueError, match="shapes the traced program"):
+        ALG.get_algorithm("pame").bind_batched(
+            grad_fn, topo, [PaMEConfig(p=0.2), PaMEConfig(p=0.4)]
+        )
+    with pytest.raises(ValueError, match="shapes the traced program"):
+        ALG.get_algorithm("dfedsam").bind_batched(
+            grad_fn, topo,
+            [ALG.DFedSAMHp(local_steps=1), ALG.DFedSAMHp(local_steps=2)],
+        )
+    with pytest.raises(TypeError):
+        ALG.get_algorithm("dpsgd").bind_batched(
+            grad_fn, topo, [PaMEConfig()]
+        )
+    # an int field that is neither static-listed nor setup-realized cannot
+    # ride a lane scalar — the classifier must refuse, not silently bake
+    # config 0's value into every lane
+    import dataclasses as dc
+
+    @dc.dataclass(frozen=True)
+    class OddHp:
+        reps: int = 1
+
+    spec = ALG.Algorithm(
+        name="odd", hp_cls=OddHp,
+        init=lambda key, stacked, ctx, batch0: B.dpsgd_init(key, stacked),
+        step=lambda s, b_, ctx: B.dpsgd_step(
+            s, b_, ctx.grad_fn, ctx.mixer, 0.1),
+        wire_bits=lambda topo_, hps, n_: 0.0,
+    )
+    with pytest.raises(ValueError, match="non-float"):
+        spec.bind_batched(grad_fn, topo, [OddHp(reps=1), OddHp(reps=2)])
+
+
+def test_batched_static_wire_accounting_per_lane():
+    """Static grids charge each lane its config's Eq.-(8) rate."""
+    m, n = 8, 24
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn, objective = _linreg(m, n)
+    hps = GRIDS["pame"]
+    ba = ALG.get_algorithm("pame").bind_batched(grad_fn, topo, hps, seeds=[0, 1])
+    _, hist = ba.run(
+        jnp.zeros(n), m, lambda k: batch, 8,
+        objective_fn=objective, tol_std=0.0, chunk_size=4,
+    )
+    for lane in range(ba.lanes):
+        c = int(hist["lane_config"][lane])
+        bound = ALG.get_algorithm("pame").bind(grad_fn, topo, hps[c])
+        assert hist["wire_bits_per_step"][lane] == pytest.approx(
+            bound.wire_bits(n)
+        )
+    assert np.all(hist["wire_bits_total"]
+                  == hist["wire_bits_per_step"] * hist["steps_run"])
+
+
+def test_batched_dynamic_scenario_pairs_seeds():
+    """Dynamic grids fold the lane's seed into the scenario key: the same
+    seed under different configs sees the same network sample path
+    (identical realized wire bits), different seeds see different ones."""
+    m, n = 8, 24
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn, objective = _linreg(m, n)
+    scen = Scenario(name="flaky", churn=0.1, edge_drop=0.2, seed=5)
+    ba = ALG.get_algorithm("dpsgd").bind_batched(
+        grad_fn, topo, GRIDS["dpsgd"], seeds=[0, 1], scenario=scen
+    )
+    _, hist = ba.run(
+        jnp.zeros(n), m, lambda k: batch, 12,
+        objective_fn=objective, tol_std=0.0, chunk_size=6,
+    )
+    assert np.isfinite(hist["objective"]).all()
+    wire = hist["wire_bits"]  # [steps, L], lanes = (c0s0, c0s1, c1s0, c1s1)
+    np.testing.assert_array_equal(wire[:, 0], wire[:, 2])
+    np.testing.assert_array_equal(wire[:, 1], wire[:, 3])
+    assert (wire[:, 0] != wire[:, 1]).any()
+
+
+def test_batched_temporal_threads_lane_aux():
+    """TemporalScenario grids thread the Markov state + staleness ring as
+    lane-stacked aux through the scan; per-lane histograms come back."""
+    m, n = 8, 24
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn, objective = _linreg(m, n)
+    scen = TemporalScenario(
+        name="stale", straggler=0.4, staleness=2,
+        burst_down=0.05, burst_up=0.3, seed=4,
+    )
+    ba = ALG.get_algorithm("pame").bind_batched(
+        grad_fn, topo, [GRIDS["pame"][0]], seeds=[0, 1, 2], scenario=scen
+    )
+    _, hist = ba.run(
+        jnp.zeros(n), m, lambda k: batch, 12,
+        objective_fn=objective, tol_std=0.0, chunk_size=6,
+    )
+    assert np.isfinite(hist["objective"]).all()
+    assert hist["staleness_hist"].shape == (3, scen.staleness + 1)
+    # some participant-steps actually ran stale
+    assert hist["staleness_hist"][:, 1:].sum() > 0
+
+
+def test_batched_sweep_traces_step_once():
+    """Compile-count regression guard: an S×C batched sweep traces the
+    step function exactly as often as a single unbatched run — the lane
+    count must never enter the trace count (that is the whole point of
+    the batched engine)."""
+    m, n = 6, 12
+    topo = build_topology("ring", m)
+    batch, grad_fn, objective = _linreg(m, n)
+
+    def counting_spec(counter):
+        def step(state, batch_, ctx):
+            counter.append(1)  # python body runs only while tracing
+            return B.dpsgd_step(
+                state, batch_, ctx.grad_fn, ctx.mixer, ctx.hps.lr
+            )
+
+        return ALG.Algorithm(
+            name="counting_dpsgd", hp_cls=ALG.DPSGDHp,
+            init=lambda key, stacked, ctx, batch0: B.dpsgd_init(key, stacked),
+            step=step,
+            wire_bits=lambda topo_, hps, n_: 0.0,
+        )
+
+    traces = {}
+    for tag, seeds, hps in (
+        ("single", [0], [ALG.DPSGDHp(lr=0.1)]),
+        ("grid", [0, 1, 2, 3], [ALG.DPSGDHp(lr=0.1), ALG.DPSGDHp(lr=0.05)]),
+    ):
+        counter = []
+        spec = counting_spec(counter)
+        ba = spec.bind_batched(grad_fn, topo, hps, seeds=seeds)
+        # two chunks of the same length -> one compiled executable
+        ba.run(
+            jnp.zeros(n), m, lambda k: batch, 8,
+            objective_fn=objective, tol_std=0.0, chunk_size=4,
+        )
+        traces[tag] = len(counter)
+    assert traces["grid"] == traces["single"], traces
+    assert traces["grid"] <= 4, traces  # a small tracing constant, not S·C
+
+
+def test_engine_run_batched_per_lane_metrics():
+    """engine.run_batched: per-lane metric buffers and steps_run."""
+
+    def step(state, batch):
+        new = state + jnp.arange(1.0, state.shape[0] + 1.0)[:, None]
+        return new, {"loss_mean": new.mean(axis=1)}
+
+    state0 = jnp.zeros((3, 2))  # 3 lanes
+    state, metrics, info = engine.run_batched(
+        step, state0, lambda k: None, 6, lanes=3, chunk_size=4,
+        params_of=lambda s: s, donate=False,
+    )
+    assert metrics["loss_mean"].shape == (6, 3)
+    np.testing.assert_allclose(
+        metrics["loss_mean"][:, 2], 3.0 * np.arange(1, 7)
+    )
+    np.testing.assert_array_equal(info["steps_run"], [6, 6, 6])
+
+
+# ---------------------------------------------------------------------------
+# segment-sum vs slots gossip core on degenerate graphs
+# ---------------------------------------------------------------------------
+def _tree(m, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((m, 5, 3)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((m,)), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("kind,m", [
+    ("star", 8),      # hub with m-1 spokes vs degree-1 leaves
+    ("complete", 2),  # minimal graph
+    ("ring", 6),
+    ("erdos_renyi", 10),
+])
+def test_segsum_matches_slots_on_graphs(kind, m):
+    kwargs = dict(p=0.5, seed=2) if kind == "erdos_renyi" else {}
+    topo = build_topology(kind, m, **kwargs)
+    tree = _tree(m, seed=m)
+    out_slots = make_mixer(topo, "sparse", impl="slots").mix(tree)
+    out_seg = make_mixer(topo, "sparse", impl="segsum").mix(tree)
+    for key in tree:
+        np.testing.assert_allclose(
+            np.asarray(out_seg[key]), np.asarray(out_slots[key]),
+            rtol=1e-5, atol=1e-6,
+        )
+    # all Mixer variants, jitted too
+    mx_sl = make_mixer(topo, "sparse", impl="slots")
+    mx_sg = make_mixer(topo, "sparse", impl="segsum")
+    for fn in ("mix", "mix_lazy", "mix_half"):
+        a = jax.jit(getattr(mx_sl, fn))(tree)
+        b = jax.jit(getattr(mx_sg, fn))(tree)
+        for key in tree:
+            np.testing.assert_allclose(
+                np.asarray(b[key]), np.asarray(a[key]),
+                rtol=1e-5, atol=1e-6, err_msg=fn,
+            )
+
+
+def test_segsum_isolated_node_and_poisoned_padding():
+    """An all-padding row (isolated node) must reduce to the self term
+    under both impls, and the segment-sum path must ignore poisoned
+    padding weights entirely (they route to the dead segment)."""
+    m = 4
+    # node 3 isolated: only the self slot carries weight
+    nbrs = jnp.asarray([[1, 0], [0, 1], [0, 2], [3, 3]], jnp.int32)
+    w = jnp.asarray([[0.5, 0.5], [0.5, 0.5], [1.0, 0.0], [1.0, 0.0]],
+                    jnp.float32)
+    is_self = jnp.asarray(
+        [[False, True], [False, True], [False, True], [True, False]]
+    )
+    pad = jnp.asarray(
+        [[False, False], [False, False], [False, False], [False, True]]
+    )
+    pm = PaddedMixing(nbrs, w, is_self, pad)
+    x = {"v": jnp.asarray(np.random.default_rng(0).standard_normal((m, 3)),
+                          jnp.float32)}
+    out_slots = mix_padded(pm, x, impl="slots")
+    out_seg = mix_padded(pm, x, impl="segsum")
+    np.testing.assert_allclose(
+        np.asarray(out_seg["v"]), np.asarray(out_slots["v"]),
+        rtol=1e-6, atol=1e-7,
+    )
+    # isolated node keeps exactly its own value
+    np.testing.assert_allclose(
+        np.asarray(out_seg["v"][3]), np.asarray(x["v"][3]), rtol=1e-6
+    )
+    # poison the padding slot: dead-segment routing must be unaffected
+    w_bad = jnp.where(pad, jnp.nan, w)
+    out_bad = mix_padded(PaddedMixing(nbrs, w_bad, is_self, pad), x,
+                         impl="segsum")
+    np.testing.assert_array_equal(
+        np.asarray(out_bad["v"]), np.asarray(out_seg["v"])
+    )
+
+
+def test_gather_terms_multi_term_single_walk():
+    """PME-style two-term contraction (payload + mask counts) agrees with
+    two independent single-term contractions, for both impls."""
+    m, d, n = 6, 3, 5
+    rng = np.random.default_rng(1)
+    nbrs = jnp.asarray(rng.integers(0, m, (m, d)), jnp.int32)
+    w = jnp.asarray(rng.random((m, d)), jnp.float32)
+    x1 = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    x2 = jnp.asarray(rng.random((m, n)), jnp.float32)
+    for impl in ("slots", "segsum"):
+        a2, b2 = gather_terms(nbrs, [(w, x1), (w, x2)], impl=impl)
+        (a1,) = gather_terms(nbrs, [(w, x1)], impl=impl)
+        (b1,) = gather_terms(nbrs, [(w, x2)], impl=impl)
+        np.testing.assert_array_equal(np.asarray(a2), np.asarray(a1))
+        np.testing.assert_array_equal(np.asarray(b2), np.asarray(b1))
+
+
+def test_pme_padded_segsum_matches_slots():
+    """The padded PME exchange agrees across gossip impls (star hub
+    included — the hub aggregates every spoke's partial message)."""
+    from repro.core import pme
+    from repro.core.pame import make_topology_arrays
+
+    m = 8
+    topo = build_topology("star", m)
+    cfg = PaMEConfig(nu=0.9, p=0.4)
+    arrs = make_topology_arrays(topo, cfg, seed=0)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((m, 6)), jnp.float32)}
+    sel = pme.sample_neighbor_selection_padded(
+        jax.random.PRNGKey(1), arrs.nbrs, arrs.valid, arrs.t,
+        jnp.ones((m,), bool),
+    )
+    for mode in ("bernoulli", "exact"):
+        outs = {
+            impl: pme.pme_average_pytree_padded(
+                jax.random.PRNGKey(2), params, arrs.nbrs, sel, cfg.p,
+                mode=mode, pad=~arrs.valid, impl=impl,
+            )
+            for impl in ("slots", "segsum")
+        }
+        np.testing.assert_allclose(
+            np.asarray(outs["segsum"]["w"]), np.asarray(outs["slots"]["w"]),
+            rtol=1e-5, atol=1e-6, err_msg=mode,
+        )
+
+
+def test_neighbor_selection_scatter_matches_padded():
+    """The dense selection matrix built by edge-list scatter equals the
+    padded selection scattered by hand (the old one-hot semantics)."""
+    from repro.core import pme
+
+    m = 10
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=3)
+    nbrs_np, valid_np = topo.neighbor_matrix_padded()
+    nbrs, valid = jnp.asarray(nbrs_np), jnp.asarray(valid_np)
+    t = jnp.asarray(np.maximum(1, (0.5 * topo.degrees)).astype(np.int32))
+    comm = jnp.asarray(np.random.default_rng(0).random(m) < 0.7)
+    key = jax.random.PRNGKey(7)
+    a = pme.sample_neighbor_selection(key, nbrs, valid, t, comm)
+    sel = pme.sample_neighbor_selection_padded(key, nbrs, valid, t, comm)
+    ref = np.zeros((m, m), np.float32)
+    for i in range(m):
+        for slot in range(nbrs.shape[1]):
+            if bool(sel[i, slot]):
+                ref[int(nbrs[i, slot]), i] += 1.0
+    np.testing.assert_array_equal(np.asarray(a), ref)
+    # columns of non-communicating receivers are all-zero
+    np.testing.assert_array_equal(
+        np.asarray(a)[:, ~np.asarray(comm)], 0.0
+    )
