@@ -1,20 +1,35 @@
 """Checkpointing: pytree -> (msgpack manifest + one .npy per leaf).
 
-No orbax offline; this covers the launcher's needs: atomic-ish step
-directories, structure round-trip via treedef serialization, dtype/shape
-validation on restore, and `keep` garbage collection.
+No orbax offline; this covers the launcher's needs: atomic step
+directories (fsynced tmp dir + rename), structure round-trip via treedef
+serialization, dtype/shape/CRC validation on restore with a dedicated
+:class:`CheckpointCorruptError` for truncated or bit-rotted files, and
+`keep` garbage collection.  Fault-injected training leans on this store:
+a crash/rejoin run's state (and auxiliary fault carry) must restore
+exactly, so every leaf carries a crc32 checksum in the manifest.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import zlib
 from typing import Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "CheckpointCorruptError",
+]
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint exists but cannot be trusted: missing manifest or
+    leaf file, truncated array, or a crc32 mismatch.  Distinct from
+    FileNotFoundError (no checkpoint at all) so callers can fall back to
+    an older step instead of silently training from garbage."""
 
 
 def _leaf_paths(tree):
@@ -26,7 +41,15 @@ def _leaf_paths(tree):
     return out
 
 
+def _crc32_of(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+    """Write one atomic step directory: every leaf lands in a tmp dir
+    first (each file flushed + fsynced), then a single rename publishes
+    the checkpoint — a crash mid-save leaves only a ``.tmp`` directory
+    that the next save overwrites, never a half-visible ``step_*``."""
     step_dir = os.path.join(directory, f"step_{step:09d}")
     tmp_dir = step_dir + ".tmp"
     if os.path.exists(tmp_dir):
@@ -40,12 +63,19 @@ def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
             # numpy can't persist ml_dtypes natively; store widened (lossless)
             arr = arr.astype(np.float32)
         fname = f"{i:05d}_{name[:80]}.npy"
-        np.save(os.path.join(tmp_dir, fname), arr)
+        fpath = os.path.join(tmp_dir, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append(
-            {"file": fname, "dtype": true_dtype, "shape": list(arr.shape)}
+            {"file": fname, "dtype": true_dtype, "shape": list(arr.shape),
+             "crc32": _crc32_of(arr)}
         )
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(step_dir):
         shutil.rmtree(step_dir)
     os.rename(tmp_dir, step_dir)
@@ -73,14 +103,33 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
-    """Restore into the structure of `tree_like` (validates shapes/dtypes)."""
+    """Restore into the structure of `tree_like`.
+
+    Validates leaf count, shapes and per-leaf crc32 checksums; a missing
+    or unreadable leaf file, a short read, or a checksum mismatch raises
+    :class:`CheckpointCorruptError` naming the offending file.  Manifests
+    written before checksumming (no ``crc32`` key) still restore — the
+    check is simply skipped for those leaves.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     step_dir = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(step_dir, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest_path = os.path.join(step_dir, "manifest.json")
+    if not os.path.isdir(step_dir):
+        raise FileNotFoundError(f"no checkpoint for step {step} under {directory}")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"{step_dir}: manifest.json is missing"
+        ) from e
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            f"{manifest_path}: manifest is not valid JSON ({e})"
+        ) from e
     leaves, treedef = jax.tree_util.tree_flatten(tree_like)
     if len(leaves) != len(manifest["leaves"]):
         raise ValueError(
@@ -88,7 +137,22 @@ def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
         )
     out = []
     for leaf, meta in zip(leaves, manifest["leaves"]):
-        arr = np.load(os.path.join(step_dir, meta["file"]))
+        fpath = os.path.join(step_dir, meta["file"])
+        try:
+            arr = np.load(fpath)
+        except FileNotFoundError as e:
+            raise CheckpointCorruptError(
+                f"{step_dir}: leaf file {meta['file']} is missing"
+            ) from e
+        except ValueError as e:
+            # numpy raises ValueError on truncated/garbled .npy payloads
+            raise CheckpointCorruptError(
+                f"{fpath}: unreadable or truncated array ({e})"
+            ) from e
+        if "crc32" in meta and _crc32_of(arr) != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"{fpath}: crc32 mismatch — checkpoint is corrupt"
+            )
         want = np.asarray(leaf)
         if list(arr.shape) != list(want.shape):
             raise ValueError(f"shape mismatch for {meta['file']}: {arr.shape} vs {want.shape}")

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import baselines as B
 from repro.core import engine
+from repro.core import faults as flt_mod
 from repro.core import pame as pame_mod
 from repro.core import scenarios as scen_mod
 from repro.core import temporal as temp_mod
@@ -149,6 +150,17 @@ class Algorithm:
     # scalar itself entering the trace — the stacked per-config extras
     # carry the difference.
     setup_hp_fields: Tuple[str, ...] = ()
+    # optional (hps) -> bool: the step consumes the delayed-delivery
+    # extras itself (``fresh_params`` fresh self-view + ``delivered``
+    # message masks) instead of the wrapper's post-hoc innovation re-add
+    # — PaME's memoryless exchange needs no mean bookkeeping.
+    handles_delay: Optional[Callable] = None
+    # optional replicated variants for fault-injected binds (surrogate-
+    # memory algorithms): ``rep_init(key, stacked, ctx, batch0, arrays)``
+    # and ``rep_step(state, batch, ctx)`` reading the FaultRealization
+    # from ``ctx.extras["fault"]`` (see ``repro.core.faults``).
+    rep_init: Optional[Callable] = None
+    rep_step: Optional[Callable] = None
 
     def bind(
         self,
@@ -159,6 +171,7 @@ class Algorithm:
         mixing: str = "sparse",
         seed: int = 0,
         scenario: Optional[AnyScenario] = None,
+        faults: Optional[flt_mod.FaultModel] = None,
     ) -> "BoundAlgorithm":
         """Close the spec over (grad_fn, topology, hps, mixing, scenario).
 
@@ -172,6 +185,16 @@ class Algorithm:
         state and the bounded-staleness snapshot ring through the
         engine's auxiliary carry slot; its step signature grows to
         ``step(state, batch, k, aux) -> (state, metrics, aux)``.
+
+        A non-static ``faults`` model (``repro.core.faults``) layers
+        message-level failures over the (possibly static) base scenario:
+        per-direction loss, lossy-link bursts, delayed delivery and
+        transient crashes, with per-receiver renormalized weights and —
+        for algorithms registered with replicated variants — per-receiver
+        surrogate replicas with wire-charged ack/repair resync.  The step
+        signature is the temporal one (aux carries the ``FaultCarry``).
+        A zero-rate ``FaultModel`` binds the plain fault-free program,
+        bit-identical to ``faults=None``.
         """
         hps = self.hp_cls() if hps is None else hps
         if not isinstance(hps, self.hp_cls):
@@ -184,6 +207,22 @@ class Algorithm:
         mixer = make_mixer(topo, "matrix" if mixing == "matrix" else mixing)
         ctx = AlgoContext(grad_fn=grad_fn, topo=topo, hps=hps, mixer=mixer,
                           extras=extras)
+        if faults is not None and faults.is_static:
+            faults = None  # zero-rate model == the fault-free program
+        if faults is not None:
+            if isinstance(scenario, temp_mod.TemporalScenario):
+                raise NotImplementedError(
+                    "faults cannot stack on a TemporalScenario: fold the "
+                    "staleness into FaultModel(delay=..., max_delay=...) "
+                    "and the link/node dynamics into a base Scenario"
+                )
+            base = scenario if scenario is not None else scen_mod.Scenario(
+                name="static")
+            return BoundAlgorithm(
+                self, ctx, scenario=base,
+                scen_arrays=scen_mod.make_scenario_arrays(topo, base),
+                mixing_mode=mixing, faults=faults,
+            )
         if scenario is not None and not scenario.is_static:
             return BoundAlgorithm(
                 self, ctx, scenario=scenario,
@@ -202,6 +241,7 @@ class Algorithm:
         mixing: str = "sparse",
         seed: int = 0,
         scenario: Optional[AnyScenario] = None,
+        faults: Optional[flt_mod.FaultModel] = None,
     ) -> "BatchedAlgorithm":
         """Close the spec over S seeds × C configs as ONE lane-batched step.
 
@@ -224,7 +264,10 @@ class Algorithm:
         A dynamic ``scenario`` is supported: each lane folds its seed
         into the scenario key, so different seeds draw independent
         network sample paths (and the same seed under different configs
-        sees the same path — paired comparisons).
+        sees the same path — paired comparisons).  A non-static
+        ``faults`` model likewise folds each lane's seed into the fault
+        key — independent fault sample paths per seed, shared across
+        configs.
         """
         hps_list = [self.hp_cls() if h is None else h
                     for h in (hps_list or [None])]
@@ -292,14 +335,27 @@ class Algorithm:
         mixer = make_mixer(topo, "matrix" if mixing == "matrix" else mixing)
         ctx0 = AlgoContext(grad_fn=grad_fn, topo=topo, hps=hps0, mixer=mixer,
                            extras=shared_extras)
+        if faults is not None and faults.is_static:
+            faults = None  # zero-rate model == the fault-free program
         scen_arrays = None
-        if scenario is not None and not scenario.is_static:
+        if faults is not None:
+            if isinstance(scenario, temp_mod.TemporalScenario):
+                raise NotImplementedError(
+                    "faults cannot stack on a TemporalScenario: fold the "
+                    "staleness into FaultModel(delay=..., max_delay=...) "
+                    "and the link/node dynamics into a base Scenario"
+                )
+            if scenario is None:
+                scenario = scen_mod.Scenario(name="static")
+            scen_arrays = scen_mod.make_scenario_arrays(topo, scenario)
+        elif scenario is not None and not scenario.is_static:
             scen_arrays = scen_mod.make_scenario_arrays(topo, scenario)
         elif scenario is not None:
             scenario = None  # static scenario == the fixed-Topology path
         return BatchedAlgorithm(
             self, ctx0, eff_hps, seeds, swept, stacked_extras,
             mixing_mode=mixing, scenario=scenario, scen_arrays=scen_arrays,
+            faults=faults,
         )
 
 
@@ -326,12 +382,18 @@ class BoundAlgorithm:
         scenario: Optional[AnyScenario] = None,
         scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
         mixing_mode: str = "sparse",
+        faults: Optional[flt_mod.FaultModel] = None,
+        fault_key: Optional[jax.Array] = None,
     ):
         self.spec = spec
         self.ctx = ctx
         self.scenario = scenario
         self.scen_arrays = scen_arrays
         self._mixing_mode = mixing_mode
+        self.faults = faults
+        if faults is not None and fault_key is None:
+            fault_key = jax.random.PRNGKey(faults.seed)
+        self.fault_key = fault_key
 
     @property
     def name(self) -> str:
@@ -354,6 +416,16 @@ class BoundAlgorithm:
         return isinstance(self.scenario, temp_mod.TemporalScenario)
 
     @property
+    def faulty(self) -> bool:
+        """True when a non-static FaultModel is bound (step threads the
+        FaultCarry through the engine's auxiliary carry slot)."""
+        return self.faults is not None
+
+    @property
+    def carries_aux(self) -> bool:
+        return self.temporal or self.faulty
+
+    @property
     def params_of(self) -> Callable:
         return self.spec.params_of
 
@@ -361,11 +433,20 @@ class BoundAlgorithm:
              batch0: Optional[object] = None) -> object:
         if self.spec.needs_batch0 and batch0 is None:
             raise ValueError(f"{self.name} needs batch0 at init")
+        if self.faulty and self.spec.rep_init is not None:
+            return self.spec.rep_init(key, params_stacked, self.ctx, batch0,
+                                      self.scen_arrays)
         return self.spec.init(key, params_stacked, self.ctx, batch0)
 
-    def aux_init(self, state: object) -> temp_mod.TemporalCarry:
-        """Initial auxiliary carry for a temporal bind: stationary Markov
-        draws + the staleness ring seeded with the initial parameters."""
+    def aux_init(self, state: object):
+        """Initial auxiliary carry: the FaultCarry of a fault-injected
+        bind, or the TemporalCarry of a temporal bind (stationary Markov
+        draws + the staleness ring seeded with the initial parameters)."""
+        if self.faulty:
+            return flt_mod.fault_carry_init(
+                self.faults, self.scen_arrays, self.spec.params_of(state),
+                self.fault_key,
+            )
         if not self.temporal:
             raise TypeError(f"{self.name} is not bound to a TemporalScenario")
         return temp_mod.temporal_carry_init(
@@ -374,7 +455,7 @@ class BoundAlgorithm:
 
     def step(self, state: object, batch: object,
              k: Optional[jax.Array] = None,
-             aux: Optional[temp_mod.TemporalCarry] = None):
+             aux: Optional[object] = None):
         if not self.dynamic:
             return self.spec.step(state, batch, self.ctx)
         if k is None:
@@ -382,6 +463,15 @@ class BoundAlgorithm:
                 f"{self.name} is bound to scenario {self.scenario.name!r}: "
                 "step(state, batch, k) needs the global step index"
             )
+        if self.faulty:
+            if aux is None:
+                raise TypeError(
+                    f"{self.name} is bound to fault model "
+                    f"{self.faults.name!r}: step(state, batch, k, aux) "
+                    "needs the FaultCarry (see aux_init)"
+                )
+            return self._fault_step(state, batch,
+                                    jnp.asarray(k, jnp.int32), aux)
         if self.temporal:
             if aux is None:
                 raise TypeError(
@@ -434,24 +524,33 @@ class BoundAlgorithm:
 
         Advances the Markov chains from the carried state, realizes the
         step's doubly-stochastic matrix with delayed stragglers still
-        participating, substitutes their ring-gathered t-delayed
-        parameters into the exchange (consistently: the whole step runs
-        on the substituted stack, so every public quantity derived from a
-        delayed node's parameters is the delayed version), and afterwards
-        re-adds each delayed node's private innovation (fresh − delayed)
-        to its own row — which restores the global parameter sum exactly,
-        for every realized matrix.  Requires the algorithm state to carry
-        its node-stacked parameters in a ``params`` field (all built-in
+        participating, and substitutes their ring-gathered t-delayed
+        parameters into the exchange — message-only delay: receivers see
+        the stale values, but a delayed node's *local compute* never
+        waits.  Gradients are steered back to the fresh iterate via the
+        ``grad_shift`` extra (fresh − delayed, zero rows for punctual
+        nodes), and after the step each delayed node's private innovation
+        (fresh − delayed) is re-added to its own row.  On the substituted
+        stack ``mixed_j = B_jj·eff_j + Σ off-terms``, so the re-add makes
+        the self-view ``B_jj·fresh_j + (1−B_jj)·(fresh_j − eff_j)`` on
+        top of the off-diagonal terms: exactly the fresh self-view plus
+        the (1−B_jj)-scaled innovation correction that restores the
+        global parameter sum for every realized matrix.  Algorithms whose
+        ``handles_delay(hps)`` is true (PaME's dense exchange) instead
+        consume the fresh stack directly (``fresh_params`` extra → the
+        lambda=0 / uncovered-coordinate fallback) and skip the re-add —
+        their exchange is memoryless, so there is no surrogate mean to
+        rebalance.  Requires the algorithm state to carry its
+        node-stacked parameters in a ``params`` field (all built-in
         registrations do).
         """
         new_ts, r, delayed, tau = temp_mod.advance(
             self.scenario, self.scen_arrays, aux.ts, k
         )
         mixer = scen_mod.scenario_mixer(self.scen_arrays, r, self._mixing_mode)
-        ctx_t = dataclasses.replace(
-            self.ctx, mixer=mixer,
-            extras={**self.ctx.extras, "realization": r},
-        )
+        extras = {**self.ctx.extras, "realization": r}
+        hd = (self.spec.handles_delay is not None
+              and self.spec.handles_delay(self.ctx.hps))
         d_max = self.scenario.staleness
         ring = aux.ring
         if d_max > 0:
@@ -459,18 +558,28 @@ class BoundAlgorithm:
             slot = jnp.mod(k - tau, d_max)
             eff = ring_gather(ring, fresh, slot, delayed)
             state_in = state._replace(params=eff)
+            if hd:
+                extras["fresh_params"] = fresh
+            else:
+                # zero rows for punctual nodes: every gradient call point
+                # becomes the undelayed iterate, no masking needed
+                extras["grad_shift"] = jax.tree_util.tree_map(
+                    lambda f, e: f - e, fresh, eff
+                )
         else:
             state_in = state
+        ctx_t = dataclasses.replace(self.ctx, mixer=mixer, extras=extras)
         new_state, metrics = self.spec.step(state_in, batch, ctx_t)
         if d_max > 0:
-            def _readd(p, f, e):
-                keep = delayed.reshape((-1,) + (1,) * (p.ndim - 1))
-                return p + jnp.where(keep, f - e, jnp.zeros_like(p))
+            if not hd:
+                def _readd(p, f, e):
+                    keep = delayed.reshape((-1,) + (1,) * (p.ndim - 1))
+                    return p + jnp.where(keep, f - e, jnp.zeros_like(p))
 
-            new_params = jax.tree_util.tree_map(
-                _readd, self.spec.params_of(new_state), fresh, eff
-            )
-            new_state = new_state._replace(params=new_params)
+                new_params = jax.tree_util.tree_map(
+                    _readd, self.spec.params_of(new_state), fresh, eff
+                )
+                new_state = new_state._replace(params=new_params)
             ring = temp_mod.ring_push(ring, fresh, k, d_max)
             tgrid = jnp.arange(d_max + 1, dtype=jnp.int32)
             metrics["stale_hist"] = jnp.sum(
@@ -481,6 +590,92 @@ class BoundAlgorithm:
         new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
         metrics = self._realized_metrics(r, state, metrics)
         return new_state, metrics, temp_mod.TemporalCarry(new_ts, ring)
+
+    def _fault_step(self, state: object, batch: object, k: jax.Array,
+                    aux: flt_mod.FaultCarry):
+        """One step under the bound FaultModel (fully traceable).
+
+        Samples the base scenario masks, advances the fault Markov state
+        (lossy-link bursts, crashes, delivery delays), draws the
+        per-direction message losses, and realizes the *per-receiver
+        renormalized* row-stochastic weights (``repro.core.faults``).
+        Direct parameter mixers (D-PSGD / DFedSAM) gossip under those
+        renormalized weights; algorithms registered with replicated
+        variants run their ``rep_step`` — per-receiver surrogate replicas
+        that desync on lost messages and resync through wire-charged
+        repair traffic — and PaME consumes the delivery masks natively
+        (``delivered`` extra: sent messages are charged, only delivered
+        ones enter the count-normalized average).  Delayed delivery
+        reuses the temporal snapshot ring with the same fresh-self-view
+        semantics as :meth:`_temporal_step`; crashed nodes' state freezes
+        bitwise (the local checkpoint they rejoin from).
+        """
+        fm = self.faults
+        edge_up, alive, straggler = scen_mod.sample_masks(
+            self.scenario, self.scen_arrays, k
+        )
+        new_fs, fr = flt_mod.advance_faults(
+            fm, self.scen_arrays, aux.fs, self.fault_key, k,
+            edge_up, alive, straggler,
+        )
+        r = fr.base
+        use_rep = self.spec.rep_step is not None
+        # the renormalized weights keep direct parameter mixing
+        # row-stochastic under asymmetric loss; replicated steps and PaME
+        # read the symmetric base weights / delivery masks from `fr`
+        mixer = scen_mod.scenario_mixer(
+            self.scen_arrays, r._replace(weights=fr.weights),
+            self._mixing_mode,
+        )
+        extras = {**self.ctx.extras, "realization": r, "fault": fr,
+                  "fault_arrays": self.scen_arrays,
+                  "delivered": fr.recv_ok, "repair": fm.repair}
+        hd = (self.spec.handles_delay is not None
+              and self.spec.handles_delay(self.ctx.hps))
+        d_max = fm.max_delay
+        ring = aux.ring
+        if d_max > 0:
+            fresh = self.spec.params_of(state)
+            slot = jnp.mod(k - fr.tau, d_max)
+            eff = ring_gather(ring, fresh, slot, fr.delayed)
+            state_in = state._replace(params=eff)
+            if hd:
+                extras["fresh_params"] = fresh
+            else:
+                extras["grad_shift"] = jax.tree_util.tree_map(
+                    lambda f, e: f - e, fresh, eff
+                )
+        else:
+            state_in = state
+        if use_rep:
+            n = sum(
+                int(np.prod(leaf.shape[1:]))
+                for leaf in jax.tree_util.tree_leaves(
+                    self.spec.params_of(state))
+            )
+            extras["innov_bits"] = float(self.spec.edge_bits(self.ctx.hps, n))
+        ctx_t = dataclasses.replace(self.ctx, mixer=mixer, extras=extras)
+        step_fn = self.spec.rep_step if use_rep else self.spec.step
+        new_state, metrics = step_fn(state_in, batch, ctx_t)
+        if d_max > 0:
+            if not hd:
+                def _readd(p, f, e):
+                    keep = fr.delayed.reshape((-1,) + (1,) * (p.ndim - 1))
+                    return p + jnp.where(keep, f - e, jnp.zeros_like(p))
+
+                new_params = jax.tree_util.tree_map(
+                    _readd, self.spec.params_of(new_state), fresh, eff
+                )
+                new_state = new_state._replace(params=new_params)
+            ring = temp_mod.ring_push(ring, fresh, k, d_max)
+            metrics["stale_nodes"] = jnp.sum(fr.delayed.astype(jnp.int32))
+        new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
+        metrics = self._realized_metrics(r, state, metrics)
+        metrics["col_defect"] = fr.col_defect
+        metrics["mean_drift"] = new_fs.drift
+        metrics["dropped_msgs"] = fr.dropped.astype(jnp.float32)
+        metrics["crashed_nodes"] = jnp.sum(new_fs.crashed.astype(jnp.int32))
+        return new_state, metrics, flt_mod.FaultCarry(new_fs, ring)
 
     def wire_bits(self, n: int) -> float:
         """Expected bits on the wire per step, summed over the network."""
@@ -498,14 +693,14 @@ class BoundAlgorithm:
         runner = engine.make_scan_runner(
             self.step, objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, chunk_size=chunk_size,
-            step_takes_index=self.dynamic, carries_aux=self.temporal,
+            step_takes_index=self.dynamic, carries_aux=self.carries_aux,
         )
 
         def run(key, params0, m, batch_fn, num_steps):
             stacked = B.stack_params(params0, m)
             batch0 = batch_fn(0) if self.spec.needs_batch0 else None
             state = self.init(key, stacked, batch0)
-            aux = self.aux_init(state) if self.temporal else None
+            aux = self.aux_init(state) if self.carries_aux else None
             state, metrics, info = runner(state, batch_fn, num_steps, aux=aux)
             info = dict(info)
             info.pop("aux", None)
@@ -542,13 +737,13 @@ class BoundAlgorithm:
         stacked = B.stack_params(params0, m)
         batch0 = batch_fn(0) if self.spec.needs_batch0 else None
         state = self.init(key, stacked, batch0)
-        aux = self.aux_init(state) if self.temporal else None
+        aux = self.aux_init(state) if self.carries_aux else None
         state, history = B.run_algorithm(
             self.step, state, batch_fn, num_steps,
             objective_fn=objective_fn, params_of=self.spec.params_of,
             tol_std=tol_std, driver=driver, chunk_size=chunk_size,
             step_takes_index=self.dynamic,
-            carries_aux=self.temporal, aux=aux,
+            carries_aux=self.carries_aux, aux=aux,
         )
         self._account_wire(history, params0)
         return state, history
@@ -601,6 +796,7 @@ class BatchedAlgorithm:
         mixing_mode: str = "sparse",
         scenario: Optional[AnyScenario] = None,
         scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
+        faults: Optional[flt_mod.FaultModel] = None,
     ):
         self.spec = spec
         self.ctx0 = ctx0
@@ -609,6 +805,7 @@ class BatchedAlgorithm:
         self.scenario = scenario
         self.scen_arrays = scen_arrays
         self._mixing_mode = mixing_mode
+        self.faults = faults
         c, s = len(self.hps_list), len(self.seeds)
         self.lane_config = np.repeat(np.arange(c), s)       # [L]
         self.lane_seed = np.asarray(self.seeds * c)         # [L]
@@ -633,6 +830,13 @@ class BatchedAlgorithm:
             self._scen_keys = jax.vmap(
                 lambda s: jax.random.fold_in(scen_arrays.key, s)
             )(jnp.asarray(self.lane_seed, jnp.uint32))
+        self._fault_keys = None
+        if faults is not None:
+            # per-seed fault sample paths (shared across configs)
+            fk = jax.random.PRNGKey(faults.seed)
+            self._fault_keys = jax.vmap(
+                lambda s: jax.random.fold_in(fk, s)
+            )(jnp.asarray(self.lane_seed, jnp.uint32))
 
     # -- grid geometry ------------------------------------------------------
     @property
@@ -652,12 +856,21 @@ class BatchedAlgorithm:
         return isinstance(self.scenario, temp_mod.TemporalScenario)
 
     @property
+    def faulty(self) -> bool:
+        return self.faults is not None
+
+    @property
+    def carries_aux(self) -> bool:
+        return self.temporal or self.faulty
+
+    @property
     def params_of(self) -> Callable:
         return self.spec.params_of
 
     # -- lane plumbing ------------------------------------------------------
     def _lane_bound(self, hp_vals: dict, ex_arrays: dict,
-                    scen_key: Optional[jax.Array]) -> BoundAlgorithm:
+                    scen_key: Optional[jax.Array],
+                    fault_key: Optional[jax.Array] = None) -> BoundAlgorithm:
         """Rebuild the single-lane BoundAlgorithm inside the vmapped body:
         traced hp scalars replace the dataclass fields, the lane's slice
         of the stacked setup extras joins the shared ones."""
@@ -666,13 +879,13 @@ class BatchedAlgorithm:
         ctx = dataclasses.replace(
             self.ctx0, hps=hps, extras={**self.ctx0.extras, **ex_arrays}
         )
-        scen_arrays = (
-            self.scen_arrays._replace(key=scen_key)
-            if scen_key is not None else None
-        )
+        scen_arrays = self.scen_arrays
+        if scen_key is not None and scen_arrays is not None:
+            scen_arrays = scen_arrays._replace(key=scen_key)
         return BoundAlgorithm(
             self.spec, ctx, scenario=self.scenario,
             scen_arrays=scen_arrays, mixing_mode=self._mixing_mode,
+            faults=self.faults, fault_key=fault_key,
         )
 
     def init(self, params0: object, m: int,
@@ -689,7 +902,15 @@ class BatchedAlgorithm:
                               self._lane_extras)
 
     def aux_init(self, state: object) -> object:
-        """Lane-stacked TemporalCarry for a temporal bind."""
+        """Lane-stacked auxiliary carry (FaultCarry or TemporalCarry)."""
+        if self.faulty:
+            def lane(st, scen_key, fkey):
+                return flt_mod.fault_carry_init(
+                    self.faults, self.scen_arrays._replace(key=scen_key),
+                    self.spec.params_of(st), fkey,
+                )
+
+            return jax.vmap(lane)(state, self._scen_keys, self._fault_keys)
         if not self.temporal:
             raise TypeError(f"{self.name} is not bound to a TemporalScenario")
 
@@ -706,16 +927,17 @@ class BatchedAlgorithm:
         """Lane-batched step — one vmap over the lane axis; the batch and
         the global step index broadcast to every lane."""
 
-        def lane(st, hp_vals, ex_arrays, scen_key, ax):
-            ba = self._lane_bound(hp_vals, ex_arrays, scen_key)
-            if self.temporal:
+        def lane(st, hp_vals, ex_arrays, scen_key, fkey, ax):
+            ba = self._lane_bound(hp_vals, ex_arrays, scen_key, fkey)
+            if self.carries_aux:
                 return ba.step(st, batch, k, ax)
             if self.dynamic:
                 return ba.step(st, batch, k)
             return ba.step(st, batch)
 
         return jax.vmap(lane)(
-            state, self._lane_hp, self._lane_extras, self._scen_keys, aux
+            state, self._lane_hp, self._lane_extras, self._scen_keys,
+            self._fault_keys, aux,
         )
 
     def wire_bits(self, n: int) -> float:
@@ -738,13 +960,13 @@ class BatchedAlgorithm:
             self.step, objective_fn=objective_fn,
             params_of=self.spec.params_of, tol_std=tol_std,
             chunk_size=chunk_size, step_takes_index=self.dynamic,
-            carries_aux=self.temporal, lanes=self.lanes,
+            carries_aux=self.carries_aux, lanes=self.lanes,
         )
 
         def run(params0, m, batch_fn, num_steps):
             batch0 = batch_fn(0) if self.spec.needs_batch0 else None
             state = self.init(params0, m, batch0)
-            aux = self.aux_init(state) if self.temporal else None
+            aux = self.aux_init(state) if self.carries_aux else None
             state, metrics, info = runner(state, batch_fn, num_steps,
                                           aux=aux)
             return state, self._assemble_history(metrics, info, params0)
@@ -912,9 +1134,17 @@ register(Algorithm(
         key, stacked, ctx.topo.m, ctx.hps),
     step=lambda state, batch, ctx: pame_mod.pame_step(
         state, batch, ctx.grad_fn, ctx.extras["topo_arrays"], ctx.hps,
-        realization=ctx.extras.get("realization")),
+        realization=ctx.extras.get("realization"),
+        self_params=ctx.extras.get("fresh_params"),
+        delivered=ctx.extras.get("delivered")),
     wire_bits=_pame_wire_bits,
     setup=_pame_setup,
+    # dense-exchange PaME consumes message-only delay natively: senders
+    # transmit the ring-delayed stack while the lambda=0 / uncovered-
+    # coordinate fallback reads the fresh self-view — no innovation
+    # re-add (the count-normalized average is memoryless).  The
+    # compressed exchange paths keep the wrapper's re-add semantics.
+    handles_delay=lambda hps: hps.exchange == "dense",
     # PaME's step emits its own realized "wire_bits" (per-message Eq. (8)
     # on the selected surviving neighbors), so no per-edge rate here.
     # p fixes the message payload size s = round(p·n) (shape-static);
@@ -929,7 +1159,8 @@ register(Algorithm(
     hp_cls=DPSGDHp,
     init=lambda key, stacked, ctx, batch0: B.dpsgd_init(key, stacked),
     step=lambda state, batch, ctx: B.dpsgd_step(
-        state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr),
+        state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
+        grad_shift=ctx.extras.get("grad_shift")),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _full_msg_bits(hps, n)),
     edge_bits=_full_msg_bits,
@@ -942,7 +1173,8 @@ register(Algorithm(
     init=lambda key, stacked, ctx, batch0: B.dfedsam_init(key, stacked),
     step=lambda state, batch, ctx: B.dfedsam_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
-        rho=ctx.hps.rho, local_steps=ctx.hps.local_steps),
+        rho=ctx.hps.rho, local_steps=ctx.hps.local_steps,
+        grad_shift=ctx.extras.get("grad_shift")),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _full_msg_bits(hps, n)),
     edge_bits=_full_msg_bits,
@@ -960,13 +1192,21 @@ register(Algorithm(
     init=lambda key, stacked, ctx, batch0: B.choco_init(key, stacked),
     step=lambda state, batch, ctx: B.choco_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
-        ctx.extras["comp"], ctx.hps.gossip_gamma),
+        ctx.extras["comp"], ctx.hps.gossip_gamma,
+        grad_shift=ctx.extras.get("grad_shift")),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _choco_edge_bits(hps, n)),
     edge_bits=_choco_edge_bits,
     setup=_choco_setup,
     # the rand-k sparsifier's keep count round(frac·n) is shape-static
     static_hp_fields=("comp_frac", "value_bits"),
+    rep_init=lambda key, stacked, ctx, batch0, arrays:
+        flt_mod.rep_choco_init(key, stacked, arrays),
+    rep_step=lambda state, batch, ctx: flt_mod.rep_choco_step(
+        state, batch, ctx.grad_fn, ctx.hps.lr, ctx.extras["comp"],
+        ctx.hps.gossip_gamma, ctx.extras["fault"],
+        ctx.extras["fault_arrays"], ctx.extras["innov_bits"],
+        ctx.extras["repair"], grad_shift=ctx.extras.get("grad_shift")),
 ))
 
 register(Algorithm(
@@ -976,13 +1216,21 @@ register(Algorithm(
         key, stacked, batch0, ctx.grad_fn),
     step=lambda state, batch, ctx: B.beer_step(
         state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr,
-        ctx.extras["comp"], ctx.hps.gossip_gamma),
+        ctx.extras["comp"], ctx.hps.gossip_gamma,
+        grad_shift=ctx.extras.get("grad_shift")),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _beer_edge_bits(hps, n)),
     edge_bits=_beer_edge_bits,
     needs_batch0=True,
     setup=_choco_setup,
     static_hp_fields=("comp_frac", "value_bits"),
+    rep_init=lambda key, stacked, ctx, batch0, arrays:
+        flt_mod.rep_beer_init(key, stacked, batch0, ctx.grad_fn, arrays),
+    rep_step=lambda state, batch, ctx: flt_mod.rep_beer_step(
+        state, batch, ctx.grad_fn, ctx.hps.lr, ctx.extras["comp"],
+        ctx.hps.gossip_gamma, ctx.extras["fault"],
+        ctx.extras["fault_arrays"], ctx.extras["innov_bits"],
+        ctx.extras["repair"], grad_shift=ctx.extras.get("grad_shift")),
 ))
 
 register(Algorithm(
@@ -991,11 +1239,19 @@ register(Algorithm(
     init=lambda key, stacked, ctx, batch0: B.nids_init(
         key, stacked, batch0, ctx.grad_fn, ctx.hps.lr),
     step=lambda state, batch, ctx: B.nids_step(
-        state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr, ctx.extras["q"]),
+        state, batch, ctx.grad_fn, ctx.mixer, ctx.hps.lr, ctx.extras["q"],
+        grad_shift=ctx.extras.get("grad_shift")),
     wire_bits=lambda topo, hps, n: _dense_edges_bits(
         topo, n, _anq_edge_bits(hps, n)),
     edge_bits=_anq_edge_bits,
     needs_batch0=True,
     setup=lambda topo, hps, mixing, seed: {"q": qsgd(hps.qsgd_levels)},
     static_hp_fields=("qsgd_levels",),  # quantizer wire format
+    rep_init=lambda key, stacked, ctx, batch0, arrays:
+        flt_mod.rep_nids_init(key, stacked, arrays),
+    rep_step=lambda state, batch, ctx: flt_mod.rep_nids_step(
+        state, batch, ctx.grad_fn, ctx.hps.lr, ctx.extras["q"],
+        ctx.extras["fault"], ctx.extras["fault_arrays"],
+        ctx.extras["innov_bits"], ctx.extras["repair"],
+        grad_shift=ctx.extras.get("grad_shift")),
 ))

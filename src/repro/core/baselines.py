@@ -86,6 +86,21 @@ def _node_grads(grad_fn: GradFn, params: object, batch: object, key: jax.Array):
     return jax.vmap(grad_fn)(params, batch, keys)
 
 
+def _shifted(tree: object, shift: Optional[object]) -> object:
+    """Gradient-evaluation point under message-only delay.
+
+    The bounded-staleness wrapper substitutes each delayed node's ring
+    snapshot into the parameter stack so the *network* sees the delayed
+    copy, and passes ``shift = fresh − delayed`` (exactly zero rows for
+    non-delayed nodes).  Adding it back at every gradient call evaluates
+    the local gradient on the undelayed iterate — the (1 − B_jj) split:
+    the post-step full-innovation re-add restores the self-weighted B_jj
+    share plus the (1 − B_jj) mean-bookkeeping share of the fresh point,
+    while the gradient never pays the delay.  None = classic semantics.
+    """
+    return tree if shift is None else _add(tree, shift)
+
+
 # --------------------------------------------------------------------------
 # D-PSGD
 # --------------------------------------------------------------------------
@@ -100,10 +115,13 @@ def dpsgd_init(key: jax.Array, params_stacked: object) -> DPSGDState:
 
 
 def dpsgd_step(
-    state: DPSGDState, batch: object, grad_fn: GradFn, b: MixOp, lr: float
+    state: DPSGDState, batch: object, grad_fn: GradFn, b: MixOp, lr: float,
+    grad_shift: Optional[object] = None,
 ) -> Tuple[DPSGDState, dict]:
     key = jax.random.fold_in(state.key, state.step)
-    losses, grads = _node_grads(grad_fn, state.params, batch, key)
+    losses, grads = _node_grads(
+        grad_fn, _shifted(state.params, grad_shift), batch, key
+    )
     mixed = _mix(b, state.params)
     new_params = _axpy(-lr, grads, mixed)
     return (
@@ -133,13 +151,19 @@ def dfedsam_step(
     lr: float,
     rho: float = 0.05,
     local_steps: int = 1,
+    grad_shift: Optional[object] = None,
 ) -> Tuple[DFedSAMState, dict]:
     key = jax.random.fold_in(state.key, state.step)
     params = state.params
     loss0 = None
     for t in range(local_steps):
         k_t = jax.random.fold_in(key, t)
-        losses, g1 = _node_grads(grad_fn, params, batch, k_t)
+        # grad_shift is constant through the chain, so p_t + shift walks
+        # exactly the undelayed local chain (delay hits only the mixed,
+        # transmitted iterate): p_t = eff + Σ updates ⇒ p_t + shift =
+        # fresh + Σ updates, the very points the fresh chain would visit.
+        gp = _shifted(params, grad_shift)
+        losses, g1 = _node_grads(grad_fn, gp, batch, k_t)
         if loss0 is None:
             loss0 = jnp.mean(losses)
         # per-node gradient norm for the SAM ascent step
@@ -152,7 +176,7 @@ def dfedsam_step(
             s = (rho / norm).reshape((-1,) + (1,) * (p.ndim - 1))
             return p + g * s
 
-        adv = jax.tree_util.tree_map(_ascend, params, g1)
+        adv = jax.tree_util.tree_map(_ascend, gp, g1)
         _, g2 = _node_grads(grad_fn, adv, batch, jax.random.fold_in(k_t, 1))
         params = _axpy(-lr, g2, params)
     new_params = _mix(b, params)
@@ -185,9 +209,12 @@ def choco_step(
     lr: float,
     comp: Compressor,
     gossip_gamma: float = 0.5,
+    grad_shift: Optional[object] = None,
 ) -> Tuple[ChocoState, dict]:
     key = jax.random.fold_in(state.key, state.step)
-    losses, grads = _node_grads(grad_fn, state.params, batch, key)
+    losses, grads = _node_grads(
+        grad_fn, _shifted(state.params, grad_shift), batch, key
+    )
     half = _axpy(-lr, grads, state.params)               # x^{t+1/2}
     q = _compress_tree(comp, jax.random.fold_in(key, 7), _sub(half, state.hats))
     hats = _add(state.hats, q)                            # \hat x^{t+1}
@@ -238,6 +265,7 @@ def beer_step(
     lr: float,
     comp: Compressor,
     gossip_gamma: float = 0.5,
+    grad_shift: Optional[object] = None,
 ) -> Tuple[BeerState, dict]:
     key = jax.random.fold_in(state.key, state.step)
     mx = as_mixer(b)
@@ -251,7 +279,9 @@ def beer_step(
         state.h,
         _compress_tree(comp, jax.random.fold_in(key, 3), _sub(x_new, state.h)),
     )
-    losses, grad_new = _node_grads(grad_fn, x_new, batch, key)
+    losses, grad_new = _node_grads(
+        grad_fn, _shifted(x_new, grad_shift), batch, key
+    )
     mix_z = mx.mix_lazy(state.z)
     g_new = jax.tree_util.tree_map(
         lambda g, mz, gn, gp: g + gossip_gamma * mz + gn - gp,
@@ -306,6 +336,7 @@ def nids_step(
     b: MixOp,
     lr: float,
     comp: Optional[Compressor] = None,
+    grad_shift: Optional[object] = None,
 ) -> Tuple[NidsState, dict]:
     r"""Drop-aware NIDS (exact-diffusion family), Atilde = (I + B)/2:
 
@@ -338,7 +369,9 @@ def nids_step(
     """
     key = jax.random.fold_in(state.key, state.step)
     mx = as_mixer(b)
-    losses, grad_k = _node_grads(grad_fn, state.params, batch, key)
+    losses, grad_k = _node_grads(
+        grad_fn, _shifted(state.params, grad_shift), batch, key
+    )
     z = _axpy(-lr, grad_k, state.params)
     v = jax.tree_util.tree_map(lambda zz, cc: 2.0 * zz + cc, z, state.c)
     if comp is not None:
@@ -366,6 +399,16 @@ def nids_step(
 # --------------------------------------------------------------------------
 # Generic driver — used by benchmarks to race algorithms fairly
 # --------------------------------------------------------------------------
+# per-step metrics that join the history only when the step emits them:
+# realized wire accounting (dynamic scenarios), staleness, and the
+# fault-injection layer's degradation trackers (repro.core.faults)
+_OPTIONAL_METRICS = (
+    "wire_bits", "alive_nodes", "stale_nodes",
+    "col_defect", "mean_drift", "dropped_msgs", "crashed_nodes",
+    "repair_bits", "surrogate_desync",
+)
+
+
 def run_algorithm(
     step_fn: Callable,  # (state, batch) -> (state, metrics), already closed over hps
     state,
@@ -407,10 +450,9 @@ def run_algorithm(
         history = engine.history_from(
             metrics, info,
             {"loss": "loss_mean", "objective": "objective",
-             "wire_bits": "wire_bits", "alive_nodes": "alive_nodes",
-             "stale_nodes": "stale_nodes"},
+             **{key: key for key in _OPTIONAL_METRICS}},
         )
-        for key in ("wire_bits", "alive_nodes", "stale_nodes"):
+        for key in _OPTIONAL_METRICS:
             if not history[key]:  # static runs keep the legacy schema
                 history.pop(key)
         if "stale_hist" in metrics:
@@ -433,7 +475,7 @@ def run_algorithm(
             state, metrics, aux = step(*step_args, aux)
         else:
             state, metrics = step(*step_args)
-        for key in ("wire_bits", "alive_nodes", "stale_nodes"):
+        for key in _OPTIONAL_METRICS:
             if key in metrics:
                 history.setdefault(key, []).append(float(metrics[key]))
         if "stale_hist" in metrics:

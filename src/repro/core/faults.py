@@ -1,0 +1,754 @@
+"""Message-level fault injection with per-receiver surrogate replicas.
+
+The scenario layer (`repro.core.scenarios` / `repro.core.temporal`) models
+a down link as a *symmetric edge removal known to both ends*: the realized
+matrix simply re-weights around it, and the single global copy of each
+node's public surrogate means a CHOCO/BEER/ANQ-NIDS neighbor that misses
+an innovation silently reads it back for free once the link returns.
+Real networks fail at the *message* level — per direction, in bursts,
+late, or because the sender crashed — and surrogate-memory algorithms
+desync precisely through those losses.  This module makes the failure
+model faithful:
+
+  * `FaultModel`       — the spec: i.i.d. per-direction message loss,
+                         a Gilbert–Elliott lossy-link burst chain per
+                         *directed* slot, delayed delivery (message-only
+                         delay through the staleness ring — compute is
+                         never delayed), and transient node crashes with
+                         geometric rejoin.
+  * `FaultState`       — the Markov fault state riding the engine's
+                         auxiliary carry (link chains, crash chain, delay
+                         ages, and the cumulative mean-drift tracker).
+  * `advance_faults`   — one traceable transition: compose with the base
+                         scenario masks, draw per-direction losses, build
+                         the *per-receiver renormalized* weights (lost
+                         mass folds into the self slot, so every row sums
+                         to exactly 1 under arbitrary asymmetric loss),
+                         and measure the column-sum defect — the matrix
+                         is no longer column-stochastic, and the defect
+                         is exactly the per-step drift of the global
+                         parameter mean that doubly-stochastic gossip
+                         would have preserved.
+  * `rep_*_init/step`  — per-receiver surrogate replicas for the
+                         compressed baselines: receiver i keeps its own
+                         copy of every neighbor's surrogate (conceptually
+                         [m, m, ...] state, stored in padded [m, d, ...]
+                         form — only actual neighbors hold replicas).  A
+                         lost innovation desyncs the replica; with
+                         `repair=True` the sender detects the missing ack
+                         and retransmits its *full* surrogate on the next
+                         realized link, charged at the uncompressed
+                         Eq.-(8) rate on top of the normal innovation
+                         traffic.  With `repair=False` the drift is
+                         permanent — the divergence regime the graceful-
+                         degradation benchmark races against PaME.
+
+PaME needs no replicas and no repair: its count-normalized PME average is
+memoryless, so a lost message only shrinks lambda_{i,l} and the realized
+averaging weights stay row-stochastic by construction — the structural
+reason it degrades gracefully where surrogate methods desync.
+
+Zero-rate models (`FaultModel.is_static`) are rejected at bind time by
+`Algorithm.bind` falling back to the fault-free program, so a zero-loss
+run is *bit-identical* to the pre-fault-layer path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core.compression import Compressor
+from repro.core.mixing import mix_replicated
+from repro.core.pme import message_bits
+from repro.core.scenarios import (
+    Realization,
+    ScenarioArrays,
+    realization_from_masks,
+    realization_matrix,
+)
+
+__all__ = [
+    "FaultModel",
+    "FaultState",
+    "FaultCarry",
+    "FaultRealization",
+    "FAULT_PRESETS",
+    "get_fault_model",
+    "list_fault_models",
+    "fault_state_init",
+    "fault_carry_init",
+    "advance_faults",
+    "fault_matrix",
+    "RepChocoState", "rep_choco_init", "rep_choco_step",
+    "RepBeerState", "rep_beer_init", "rep_beer_step",
+    "RepNidsState", "rep_nids_init", "rep_nids_step",
+]
+
+# init-key fold for the stationary link-chain draw — outside any reachable
+# step index (the fault key stream is separate from the scenario key, but
+# the same no-collision discipline applies)
+_INIT_LINK_FOLD = 0x7FFFFFFB
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Message-level failure spec, sampled on device per step.
+
+    All rates are python floats baked into the traced step; zero-rate
+    branches are skipped entirely, so `is_static` models compile to the
+    exact fault-free program.  The fault PRNG stream is keyed on
+    `PRNGKey(seed)` folded with the step index — independent of the
+    scenario stream, so adding faults never perturbs the base network
+    draws.
+    """
+
+    name: str = "faults"
+    # i.i.d. per-*direction* message loss (good link state)
+    loss: float = 0.0        # P[a directed message is dropped]
+    # Gilbert–Elliott burst chain per directed slot
+    burst_down: float = 0.0  # P[good -> lossy] per step
+    burst_up: float = 0.5    # P[lossy -> good] per step
+    loss_bad: float = 1.0    # P[dropped | link in the lossy state]
+    # delayed delivery (message-only: local compute is never delayed)
+    delay: float = 0.0       # P[a node's outgoing messages are late]
+    max_delay: int = 0       # D: staleness bound; past it the messages
+    #                          are dropped outright (0 disables delay)
+    # transient node crashes
+    crash: float = 0.0       # P[up -> crashed] per step
+    rejoin: float = 0.5      # P[crashed -> recovered] per step
+    # ack/repair resync of per-receiver replicas (surrogate algorithms)
+    repair: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        for field in ("loss", "burst_down", "burst_up", "loss_bad",
+                      "delay", "crash", "rejoin"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field}={v} must be a probability in [0, 1]")
+        if self.max_delay < 0:
+            raise ValueError(f"max_delay={self.max_delay} must be >= 0")
+        if self.delay > 0.0 and self.max_delay == 0:
+            raise ValueError(
+                "delay>0 needs max_delay>=1 (the staleness ring bound)"
+            )
+        if self.burst_down > 0.0 and self.burst_up == 0.0:
+            raise ValueError("burst_up=0 would make lossy links permanent")
+        if self.crash > 0.0 and self.rejoin == 0.0:
+            raise ValueError("rejoin=0 would make crashes permanent")
+
+    @property
+    def is_static(self) -> bool:
+        """True iff no fault can ever fire — bind falls back to the
+        fault-free program, bit-identical to the pre-fault path."""
+        return (
+            self.loss == self.burst_down == self.delay == self.crash == 0.0
+        )
+
+    @property
+    def stationary_lossy(self) -> float:
+        """Stationary P[link lossy] of the Gilbert–Elliott chain."""
+        denom = self.burst_down + self.burst_up
+        return self.burst_down / denom if denom > 0.0 else 0.0
+
+
+FAULT_PRESETS = {
+    "lossy": FaultModel(name="lossy", loss=0.1),
+    "bursty_loss": FaultModel(
+        name="bursty_loss", burst_down=0.05, burst_up=0.25),
+    "crashy": FaultModel(name="crashy", crash=0.02, rejoin=0.2),
+    "late": FaultModel(name="late", delay=0.3, max_delay=3),
+    "harsh_faults": FaultModel(
+        name="harsh_faults", loss=0.1, burst_down=0.05, burst_up=0.3,
+        crash=0.02, rejoin=0.25, delay=0.2, max_delay=2),
+}
+
+
+def get_fault_model(name: str) -> FaultModel:
+    if name not in FAULT_PRESETS:
+        raise ValueError(
+            f"unknown fault model {name!r}; pick from {sorted(FAULT_PRESETS)}"
+        )
+    return FAULT_PRESETS[name]
+
+
+def list_fault_models() -> Tuple[str, ...]:
+    return tuple(FAULT_PRESETS)
+
+
+class FaultState(NamedTuple):
+    """Fault Markov state carried through the scan."""
+
+    link_bad: jax.Array  # [m, d] bool — GE lossy state per *directed* slot
+    crashed: jax.Array   # [m] bool — crash chain state
+    age: jax.Array       # [m] i32 — consecutive late-delivery count
+    drift: jax.Array     # f32 scalar — cumulative column-sum defect (the
+    #                      mean-drift tracker exposed through the aux carry)
+
+
+class FaultCarry(NamedTuple):
+    """Auxiliary carry of a fault-injected run: the fault Markov state
+    plus the delayed-delivery snapshot ring (None when max_delay == 0)."""
+
+    fs: FaultState
+    ring: Optional[object]
+
+
+class FaultRealization(NamedTuple):
+    """One step's message-level outcome, layered over the base realization."""
+
+    base: Realization     # crash-aware scenario realization (symmetric)
+    recv_ok: jax.Array    # [m, d] bool — directed messages delivered
+    weights: jax.Array    # [m, d+1] f32 — per-receiver renormalized weights
+    #                       (rows sum to exactly 1 under asymmetric loss)
+    delayed: jax.Array    # [m] bool — senders served from the ring
+    tau: jax.Array        # [m] i32 — current delay per sender (0 if fresh)
+    dropped: jax.Array    # i32 — realized directed messages lost this step
+    col_defect: jax.Array  # f32 — Σ_j |colsum_j − 1| of the faulted matrix
+
+
+def fault_state_init(
+    model: FaultModel, arrays: ScenarioArrays, key: jax.Array
+) -> FaultState:
+    """Initial fault state: the link chain starts from its stationary law
+    (keyed outside the per-step fold stream); nodes start healthy and
+    punctual — crashes and delays are transient events, not a steady
+    state the run should begin in."""
+    m, d = arrays.nbrs.shape
+    link_bad = jnp.zeros((m, d), bool)
+    if model.burst_down > 0.0:
+        u = jax.random.uniform(
+            jax.random.fold_in(key, _INIT_LINK_FOLD), (m, d)
+        )
+        link_bad = u < model.stationary_lossy
+    return FaultState(
+        link_bad=link_bad,
+        crashed=jnp.zeros((m,), bool),
+        age=jnp.zeros((m,), jnp.int32),
+        drift=jnp.zeros((), jnp.float32),
+    )
+
+
+def fault_carry_init(
+    model: FaultModel,
+    arrays: ScenarioArrays,
+    params_stacked: object,
+    key: jax.Array,
+) -> FaultCarry:
+    from repro.core.temporal import ring_init
+
+    return FaultCarry(
+        fs=fault_state_init(model, arrays, key),
+        ring=ring_init(params_stacked, model.max_delay),
+    )
+
+
+def advance_faults(
+    model: FaultModel,
+    arrays: ScenarioArrays,
+    fs: FaultState,
+    key: jax.Array,
+    k: jax.Array,
+    edge_up: jax.Array,     # [m, d] bool — base scenario link survival
+    alive: jax.Array,       # [m] bool — base scenario churn state
+    straggler: jax.Array,   # [m] bool — base scenario stragglers
+) -> Tuple[FaultState, FaultRealization]:
+    """One traceable fault transition + message-level realization.
+
+    Composes with the base scenario masks (`scenarios.sample_masks`):
+    crashes fold into `alive` before the Metropolis–Hastings weights are
+    built, so a crashed node self-loops with weight exactly 1 and its
+    state freezes — the in-simulation analogue of restoring from its
+    local checkpoint on rejoin.  Loss is drawn *per directed slot*
+    (independent draws for the two directions of a link: asymmetric by
+    construction), and the kept off-diagonal weights are renormalized
+    into the self slot per receiver: every row of the realized matrix
+    sums to exactly 1, while the column sums defect by the lost mass —
+    returned as `col_defect` and accumulated into the `drift` tracker.
+    """
+    m, d = arrays.nbrs.shape
+    kk = jax.random.fold_in(key, k)
+    k_loss, k_burst, k_crash, k_delay = jax.random.split(kk, 4)
+
+    link_bad = fs.link_bad
+    if model.burst_down > 0.0:
+        u = jax.random.uniform(k_burst, (m, d))
+        link_bad = jnp.where(
+            fs.link_bad, u < 1.0 - model.burst_up, u < model.burst_down
+        )
+    crashed = fs.crashed
+    if model.crash > 0.0:
+        u = jax.random.uniform(k_crash, (m,))
+        crashed = jnp.where(
+            fs.crashed, u < 1.0 - model.rejoin, u < model.crash
+        )
+    late = jnp.zeros((m,), bool)
+    if model.delay > 0.0:
+        late = jax.random.bernoulli(k_delay, model.delay, (m,))
+    age = jnp.where(late, fs.age + 1, 0)
+    delayed = late & alive & ~crashed & (age <= model.max_delay)
+    overdue = late & ~delayed  # past the bound: messages dropped outright
+
+    r = realization_from_masks(arrays, edge_up, alive & ~crashed, straggler)
+
+    lost = jnp.zeros((m, d), bool)
+    if model.loss > 0.0 or model.burst_down > 0.0:
+        p_drop = jnp.where(link_bad, model.loss_bad, model.loss)
+        lost = jax.random.uniform(k_loss, (m, d)) < p_drop
+    sender_overdue = overdue[arrays.nbrs]
+    recv_ok = r.edge_alive & ~lost & ~sender_overdue
+
+    # per-receiver renormalization: zero the lost slots, fold the lost
+    # mass into the self slot — rows sum to exactly 1 by construction
+    w_off = jnp.where(recv_ok, r.weights[:, :d], 0.0)
+    self_w = 1.0 - jnp.sum(w_off, axis=1)
+    weights = jnp.concatenate([w_off, self_w[:, None]], axis=1)
+
+    # mean-drift tracker: the faulted matrix is row- but no longer
+    # column-stochastic; the column-sum defect is the per-step leak of
+    # the global parameter mean under direct parameter mixing
+    col = (
+        jnp.zeros((m,), jnp.float32)
+        .at[arrays.nbrs_full.reshape(-1)]
+        .add(weights.reshape(-1))
+    )
+    col_defect = jnp.sum(jnp.abs(col - 1.0))
+
+    new_fs = FaultState(
+        link_bad=link_bad, crashed=crashed, age=age,
+        drift=fs.drift + col_defect,
+    )
+    fr = FaultRealization(
+        base=r,
+        recv_ok=recv_ok,
+        weights=weights,
+        delayed=delayed,
+        tau=jnp.where(delayed, age, 0),
+        dropped=jnp.sum((r.edge_alive & ~recv_ok).astype(jnp.int32)),
+        col_defect=col_defect,
+    )
+    return new_fs, fr
+
+
+def fault_matrix(arrays: ScenarioArrays, fr: FaultRealization) -> jax.Array:
+    """The faulted [m, m] matrix (row i = receiver i): row-stochastic by
+    construction, column-defective by the lost mass."""
+    return realization_matrix(arrays, fr.base._replace(weights=fr.weights))
+
+
+# ---------------------------------------------------------------------------
+# Per-receiver surrogate replicas for the compressed baselines
+# ---------------------------------------------------------------------------
+def _mask2(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast an [m, d] mask over a replica leaf [m, d, ...]."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 2))
+
+
+def _zero_replicas(params_stacked: object, arrays: ScenarioArrays) -> object:
+    m, d = arrays.nbrs.shape
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((m, d) + x.shape[1:], x.dtype), params_stacked
+    )
+
+
+def _deliver_stream(
+    reps: object,       # [m, d, ...] receiver-held replicas
+    q: object,          # [m, ...] this step's innovation per sender
+    own_new: object,    # [m, ...] sender's post-innovation surrogate
+    nbrs: jax.Array,
+    recv_ok: jax.Array,  # [m, d]
+    pending: jax.Array,  # [m, d] — replica known-desynced, awaiting repair
+    repair: bool,
+) -> object:
+    """One delivery round of one surrogate stream.
+
+    Delivered innovation on a synced link: replica += q_sender (the
+    normal compressed message).  Delivered message on a *pending* link:
+    the sender, knowing the ack is missing, sent its full surrogate
+    instead — replica := sender's current surrogate (resync).  Lost or
+    unrealized: replica untouched (desync persists).
+    """
+    q_from = jax.tree_util.tree_map(lambda x: x[nbrs], q)
+    if not repair:
+        return jax.tree_util.tree_map(
+            lambda rep, qf: jnp.where(_mask2(recv_ok, rep), rep + qf, rep),
+            reps, q_from,
+        )
+    own_from = jax.tree_util.tree_map(lambda x: x[nbrs], own_new)
+    normal = recv_ok & ~pending
+    fixed = recv_ok & pending
+
+    def one(rep, qf, of):
+        rep = jnp.where(_mask2(normal, rep), rep + qf, rep)
+        return jnp.where(_mask2(fixed, rep), of, rep)
+
+    return jax.tree_util.tree_map(one, reps, q_from, own_from)
+
+
+def _desync(
+    valid: jax.Array, nbrs: jax.Array, reps: object, own: object
+) -> jax.Array:
+    """Σ over real base links of ||replica − sender's surrogate||² — the
+    observable surrogate desynchronization this layer exists to model."""
+    tot = jnp.zeros((), jnp.float32)
+    for rep, o in zip(
+        jax.tree_util.tree_leaves(reps), jax.tree_util.tree_leaves(own)
+    ):
+        of = o[nbrs]
+        d2 = jnp.sum(
+            (rep - of).astype(jnp.float32) ** 2,
+            axis=tuple(range(2, rep.ndim)),
+        )
+        tot = tot + jnp.sum(jnp.where(valid, d2, 0.0))
+    return tot
+
+
+def _n_total(params_stacked: object) -> int:
+    import numpy as np
+
+    return sum(
+        int(np.prod(leaf.shape[1:]))
+        for leaf in jax.tree_util.tree_leaves(params_stacked)
+    )
+
+
+def _link_traffic(
+    arrays: ScenarioArrays,
+    fr: FaultRealization,
+    pending: jax.Array,
+    repair: bool,
+    innov_bits: float,
+    repair_streams: int,
+    n: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Wire accounting + pending update shared by every replicated step.
+
+    Innovations are charged on every realized non-pending directed link
+    (bits are spent whether or not the message is then lost); repair
+    retransmissions — one full-precision Eq.-(8) message per surrogate
+    stream — on every realized pending link.  `pending` after the step is
+    simply every real base link that did not deliver this round: the
+    sender's surrogate advanced, the receiver's replica did not.
+    """
+    ea = fr.base.edge_alive
+    full = float(message_bits(n, n, 64)) * float(repair_streams)
+    if repair:
+        n_repair = jnp.sum((pending & ea).astype(jnp.float32))
+        n_normal = jnp.sum((ea & ~pending).astype(jnp.float32))
+        new_pending = arrays.valid & ~fr.recv_ok
+        repair_bits = full * n_repair
+    else:
+        n_normal = jnp.sum(ea.astype(jnp.float32))
+        new_pending = pending  # unused: stays all-False
+        repair_bits = jnp.zeros((), jnp.float32)
+    wire_bits = float(innov_bits) * n_normal + repair_bits
+    return wire_bits, repair_bits, new_pending
+
+
+# -- CHOCO-SGD with per-receiver replicas -----------------------------------
+class RepChocoState(NamedTuple):
+    params: object    # x_i
+    hats: object      # \hat x_i — the sender's own surrogate (truth)
+    reps: object      # [m, d, ...] receiver i's copy of \hat x_{nbrs[i, s]}
+    pending: jax.Array  # [m, d] bool — awaiting full-surrogate repair
+    step: jax.Array
+    key: jax.Array
+
+
+def rep_choco_init(
+    key: jax.Array, params_stacked: object, arrays: ScenarioArrays
+) -> RepChocoState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    m, d = arrays.nbrs.shape
+    return RepChocoState(
+        params=params_stacked,
+        hats=zeros,
+        reps=_zero_replicas(params_stacked, arrays),
+        pending=jnp.zeros((m, d), bool),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def rep_choco_step(
+    state: RepChocoState,
+    batch: object,
+    grad_fn,
+    lr: float,
+    comp: Compressor,
+    gossip_gamma: float,
+    fr: FaultRealization,
+    arrays: ScenarioArrays,
+    innov_bits: float,
+    repair: bool,
+    grad_shift: Optional[object] = None,
+) -> Tuple[RepChocoState, dict]:
+    """CHOCO-SGD where each receiver mixes the surrogate copies *it*
+    holds.  Mixing weights are the symmetric realized ones (a receiver
+    always has a replica to mix, however stale), so loss shows up as
+    replica desync — exactly the real-deployment failure mode — not as a
+    reweighting the receiver could not have known to apply."""
+    m, d = arrays.nbrs.shape
+    key = jax.random.fold_in(state.key, state.step)
+    losses, grads = B._node_grads(
+        grad_fn, B._shifted(state.params, grad_shift), batch, key
+    )
+    half = B._axpy(-lr, grads, state.params)
+    q = B._compress_tree(
+        comp, jax.random.fold_in(key, 7), B._sub(half, state.hats)
+    )
+    hats = B._add(state.hats, q)
+    reps = _deliver_stream(
+        state.reps, q, hats, arrays.nbrs, fr.recv_ok, state.pending, repair
+    )
+    w_off = fr.base.weights[:, :d]
+    self_w = fr.base.weights[:, d]
+    mixed = mix_replicated(w_off, self_w, reps, hats)
+    correction = jax.tree_util.tree_map(
+        lambda mx, h: gossip_gamma * (mx - h), mixed, hats
+    )
+    new_params = B._add(half, correction)
+    wire_bits, repair_bits, pending = _link_traffic(
+        arrays, fr, state.pending, repair, innov_bits,
+        repair_streams=1, n=_n_total(state.params),
+    )
+    metrics = {
+        "loss_mean": jnp.mean(losses),
+        "wire_bits": wire_bits,
+        "repair_bits": repair_bits,
+        "surrogate_desync": _desync(arrays.valid, arrays.nbrs, reps, hats),
+    }
+    return (
+        RepChocoState(new_params, hats, reps, pending, state.step + 1,
+                      state.key),
+        metrics,
+    )
+
+
+# -- BEER with per-receiver replicas ----------------------------------------
+class RepBeerState(NamedTuple):
+    params: object     # x
+    h: object          # surrogate of x (sender truth)
+    g: object          # gradient tracker
+    z: object          # surrogate of g (sender truth)
+    prev_grad: object
+    h_reps: object     # [m, d, ...] replicas of h[nbrs]
+    z_reps: object     # [m, d, ...] replicas of z[nbrs]
+    pending: jax.Array  # [m, d] bool (both streams ride one link message)
+    step: jax.Array
+    key: jax.Array
+
+
+def rep_beer_init(
+    key: jax.Array,
+    params_stacked: object,
+    batch0: object,
+    grad_fn,
+    arrays: ScenarioArrays,
+) -> RepBeerState:
+    _, g0 = B._node_grads(grad_fn, params_stacked, batch0, key)
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    g0_copy = jax.tree_util.tree_map(lambda x: x.copy(), g0)
+    m, d = arrays.nbrs.shape
+    return RepBeerState(
+        params=params_stacked, h=zeros(), g=g0, z=zeros(),
+        prev_grad=g0_copy,
+        h_reps=_zero_replicas(params_stacked, arrays),
+        z_reps=_zero_replicas(params_stacked, arrays),
+        pending=jnp.zeros((m, d), bool),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def rep_beer_step(
+    state: RepBeerState,
+    batch: object,
+    grad_fn,
+    lr: float,
+    comp: Compressor,
+    gossip_gamma: float,
+    fr: FaultRealization,
+    arrays: ScenarioArrays,
+    innov_bits: float,
+    repair: bool,
+    grad_shift: Optional[object] = None,
+) -> Tuple[RepBeerState, dict]:
+    """BEER with receiver-held h/z replicas.  Both compressed streams ride
+    one link message per step, so one pending flag covers the pair and a
+    repair retransmits both full surrogates (2 Eq.-(8) messages)."""
+    m, d = arrays.nbrs.shape
+    key = jax.random.fold_in(state.key, state.step)
+    w_off = fr.base.weights[:, :d]
+    self_w = fr.base.weights[:, d]
+    # lazy mixing of the OLD replicas (classic BEER mixes the pre-update
+    # surrogates): (B − I) through the receiver-held copies
+    mix_h = B._sub(
+        mix_replicated(w_off, self_w, state.h_reps, state.h), state.h
+    )
+    x_new = jax.tree_util.tree_map(
+        lambda x, mh, g: x + gossip_gamma * mh - lr * g,
+        state.params, mix_h, state.g,
+    )
+    qh = B._compress_tree(
+        comp, jax.random.fold_in(key, 3), B._sub(x_new, state.h)
+    )
+    h_new = B._add(state.h, qh)
+    losses, grad_new = B._node_grads(
+        grad_fn, B._shifted(x_new, grad_shift), batch, key
+    )
+    mix_z = B._sub(
+        mix_replicated(w_off, self_w, state.z_reps, state.z), state.z
+    )
+    g_new = jax.tree_util.tree_map(
+        lambda g, mz, gn, gp: g + gossip_gamma * mz + gn - gp,
+        state.g, mix_z, grad_new, state.prev_grad,
+    )
+    qz = B._compress_tree(
+        comp, jax.random.fold_in(key, 5), B._sub(g_new, state.z)
+    )
+    z_new = B._add(state.z, qz)
+    h_reps = _deliver_stream(
+        state.h_reps, qh, h_new, arrays.nbrs, fr.recv_ok, state.pending,
+        repair,
+    )
+    z_reps = _deliver_stream(
+        state.z_reps, qz, z_new, arrays.nbrs, fr.recv_ok, state.pending,
+        repair,
+    )
+    wire_bits, repair_bits, pending = _link_traffic(
+        arrays, fr, state.pending, repair, innov_bits,
+        repair_streams=2, n=_n_total(state.params),
+    )
+    desync = (
+        _desync(arrays.valid, arrays.nbrs, h_reps, h_new)
+        + _desync(arrays.valid, arrays.nbrs, z_reps, z_new)
+    )
+    metrics = {
+        "loss_mean": jnp.mean(losses),
+        "wire_bits": wire_bits,
+        "repair_bits": repair_bits,
+        "surrogate_desync": desync,
+    }
+    return (
+        RepBeerState(x_new, h_new, g_new, z_new, grad_new, h_reps, z_reps,
+                     pending, state.step + 1, state.key),
+        metrics,
+    )
+
+
+# -- (AN)Q-NIDS with per-receiver replicas ----------------------------------
+class RepNidsState(NamedTuple):
+    params: object    # x^k
+    c: object         # memory (own, exact)
+    hat_z: object     # surrogate of z (sender truth)
+    hat_c: object     # surrogate of c (sender truth, receiver-accumulated)
+    z_reps: object    # [m, d, ...] replicas of hat_z[nbrs]
+    c_reps: object    # [m, d, ...] replicas of hat_c[nbrs]
+    pending: jax.Array  # [m, d] bool
+    step: jax.Array
+    key: jax.Array
+
+
+def rep_nids_init(
+    key: jax.Array, params_stacked: object, arrays: ScenarioArrays
+) -> RepNidsState:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    m, d = arrays.nbrs.shape
+    return RepNidsState(
+        params=params_stacked, c=zeros(), hat_z=zeros(), hat_c=zeros(),
+        z_reps=_zero_replicas(params_stacked, arrays),
+        c_reps=_zero_replicas(params_stacked, arrays),
+        pending=jnp.zeros((m, d), bool),
+        step=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def rep_nids_step(
+    state: RepNidsState,
+    batch: object,
+    grad_fn,
+    lr: float,
+    comp: Compressor,
+    fr: FaultRealization,
+    arrays: ScenarioArrays,
+    innov_bits: float,
+    repair: bool,
+    grad_shift: Optional[object] = None,
+) -> Tuple[RepNidsState, dict]:
+    """Quantized NIDS with receiver-held hat_z / hat_c replicas.
+
+    The receiver-side accumulation hat_c += hat_z is a *local* operation
+    on each replica, so a z-desync compounds into the c replica every
+    step — the amplification that makes NIDS the sharpest desync case in
+    the conformance suite.  A repair resyncs both replicas from the
+    sender's current surrogates (2 full Eq.-(8) messages); the repaired
+    c replica is used from the *next* step (this step's hat_v reads the
+    pre-repair copy, mirroring the classic old-hat_c ordering).
+    """
+    m, d = arrays.nbrs.shape
+    key = jax.random.fold_in(state.key, state.step)
+    losses, grad_k = B._node_grads(
+        grad_fn, B._shifted(state.params, grad_shift), batch, key
+    )
+    z = B._axpy(-lr, grad_k, state.params)
+    v = jax.tree_util.tree_map(lambda zz, cc: 2.0 * zz + cc, z, state.c)
+    q = B._compress_tree(
+        comp, jax.random.fold_in(key, 11), B._sub(z, state.hat_z)
+    )
+    hat_z = B._add(state.hat_z, q)
+    hat_c = B._add(state.hat_c, hat_z)
+    z_reps = _deliver_stream(
+        state.z_reps, q, hat_z, arrays.nbrs, fr.recv_ok, state.pending,
+        repair,
+    )
+    # hat_v mirrors the classic "2·hat_z_new + old hat_c" ordering with
+    # the receiver's own copies
+    hat_v = jax.tree_util.tree_map(
+        lambda zr, cr: 2.0 * zr + cr, z_reps, state.c_reps
+    )
+    # receiver-local accumulation happens on every replica (delivered or
+    # not — it needs no message), then delivered repairs overwrite
+    c_reps = jax.tree_util.tree_map(
+        lambda cr, zr: cr + zr, state.c_reps, z_reps
+    )
+    if repair:
+        fixed = fr.recv_ok & state.pending
+        hat_c_from = jax.tree_util.tree_map(lambda x: x[arrays.nbrs], hat_c)
+        c_reps = jax.tree_util.tree_map(
+            lambda cr, cf: jnp.where(_mask2(fixed, cr), cf, cr),
+            c_reps, hat_c_from,
+        )
+    # off(A~)·hat_v + diag(A~)·v with A~ = (I + B)/2 through the replicas
+    mixed = mix_replicated(
+        0.5 * fr.base.weights[:, :d],
+        0.5 * (1.0 + fr.base.weights[:, d]),
+        hat_v, v,
+    )
+    corr = B._sub(mixed, v)
+    x_new = B._add(z, corr)
+    c_new = B._add(state.c, z)
+    wire_bits, repair_bits, pending = _link_traffic(
+        arrays, fr, state.pending, repair, innov_bits,
+        repair_streams=2, n=_n_total(state.params),
+    )
+    desync = (
+        _desync(arrays.valid, arrays.nbrs, z_reps, hat_z)
+        + _desync(arrays.valid, arrays.nbrs, c_reps, hat_c)
+    )
+    metrics = {
+        "loss_mean": jnp.mean(losses),
+        "wire_bits": wire_bits,
+        "repair_bits": repair_bits,
+        "surrogate_desync": desync,
+    }
+    return (
+        RepNidsState(x_new, c_new, hat_z, hat_c, z_reps, c_reps, pending,
+                     state.step + 1, state.key),
+        metrics,
+    )

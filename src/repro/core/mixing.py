@@ -59,7 +59,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "PaddedMixing", "Mixer", "mix_padded", "make_mixer", "as_mixer",
-    "ring_gather", "gather_terms", "default_impl",
+    "ring_gather", "gather_terms", "default_impl", "mix_replicated",
 ]
 
 # Above this many slots the per-slot python unroll is replaced by a
@@ -264,6 +264,31 @@ def ring_gather(
         return jnp.where(keep, r[slot, node], f)
 
     return jax.tree_util.tree_map(one, ring, fresh)
+
+
+def mix_replicated(
+    w_off: jax.Array,    # [m, d] off-diagonal receive weights (0 on padding)
+    self_w: jax.Array,   # [m] diagonal weight B_ii
+    replicas: object,    # pytree, leaves [m, d, ...] — receiver-held copies
+    own: object,         # pytree, leaves [m, ...] — receiver's own value
+) -> object:
+    """Mix per-receiver surrogate replicas: out_i = Σ_s w_off[i,s] ·
+    replicas[i,s] + self_w[i] · own[i].
+
+    Unlike `mix_padded` there is NO cross-node gather: under message-level
+    fault injection (`repro.core.faults`) each receiver mixes the copy *it*
+    holds of every neighbor's surrogate — which desyncs from the sender's
+    truth when an innovation message is lost — so the contraction is a
+    receiver-local weighted sum over the slot axis.  This is the padded
+    [m, d, ...] realization of the conceptual [m, m, ...] replica state
+    (only actual neighbors hold replicas).
+    """
+
+    def one(rep, o):
+        w = w_off.reshape(w_off.shape + (1,) * (rep.ndim - 2)).astype(rep.dtype)
+        return jnp.sum(w * rep, axis=1) + _bcast(self_w, o) * o
+
+    return jax.tree_util.tree_map(one, replicas, own)
 
 
 def _dense_padded(bmat: jax.Array) -> PaddedMixing:

@@ -128,6 +128,15 @@ def pame_step(
     realization: Optional[object] = None,  # scenarios.Realization — dynamic
     # network state for this step; restricts PME to surviving neighbors and
     # adds realized wire-bit metrics.  None keeps the static program as-is.
+    self_params: Optional[object] = None,  # fresh self-view for the lambda=0
+    # fill under bounded staleness: state.params then carries the delayed
+    # sender stack (what the wire transports) while each node's own fill
+    # reads its true current parameters.  None = classic single stack.
+    delivered: Optional[jax.Array] = None,  # [m, d] bool — message-level
+    # delivery mask (repro.core.faults).  A selected message is *sent* (and
+    # charged) regardless; only delivered ones enter the average.  PME's
+    # count normalization keeps the realized averaging row-stochastic under
+    # arbitrary asymmetric loss, with the lambda=0 fill as the limit case.
 ) -> Tuple[PaMEState, dict]:
     m = topo.nbrs.shape[0]
     k_sel, k_mask, k_data = (
@@ -148,11 +157,18 @@ def pame_step(
             k_sel, topo.nbrs, topo.valid, topo.t, comm_mask, survivors=survivors
         )
         n_messages = jnp.sum(sel.astype(jnp.int32))
+        sel_recv = sel if delivered is None else sel & delivered
         v_bar = pme.pme_average_pytree_padded(
-            k_mask, state.params, topo.nbrs, sel, cfg.p, mode=cfg.mask_mode,
-            pad=~topo.valid,
+            k_mask, state.params, topo.nbrs, sel_recv, cfg.p,
+            mode=cfg.mask_mode, pad=~topo.valid, self_params=self_params,
         )
     else:
+        if delivered is not None:
+            raise NotImplementedError(
+                "message-level delivery masks need mixing='sparse' "
+                "(padded selection); the dense selection matrix has no "
+                "per-slot delivery channel"
+            )
         a = pme.sample_neighbor_selection(
             k_sel, topo.nbrs, topo.valid, topo.t, comm_mask, survivors=survivors
         )
@@ -160,13 +176,19 @@ def pame_step(
         if cfg.exchange in ("compressed", "compressed_q8"):
             from repro.core import gossip
 
+            if self_params is not None:
+                raise NotImplementedError(
+                    "self_params (message-only delay) is not supported on "
+                    "the compressed exchange path"
+                )
             v_bar = gossip.compressed_pme_average_pytree(
                 k_mask, state.params, a, cfg.p, shardings=param_shardings,
                 quantize_bits=8 if cfg.exchange == "compressed_q8" else 0,
             )
         else:
             v_bar = pme.pme_average_pytree(
-                k_mask, state.params, a, cfg.p, mode=cfg.mask_mode
+                k_mask, state.params, a, cfg.p, mode=cfg.mask_mode,
+                self_params=self_params,
             )
     if param_shardings is not None:
         v_bar = jax.lax.with_sharding_constraint(v_bar, param_shardings)

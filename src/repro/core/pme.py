@@ -145,16 +145,18 @@ def pme_average(
     w: jax.Array,  # [m, n] node-stacked parameters
     masks: jax.Array,  # [m, n] bool per-sender coordinate masks
     a: jax.Array,  # [m, m] selection matrix, A[j, i] = j in N_i^k
+    own: Optional[jax.Array] = None,  # [m, n] receiver's own view (default w)
 ) -> jax.Array:
     """Count-weighted PME average — Alg. 2 line 6, Eq. (6)/(7).
 
     v_bar[i, l] = sum_{j in N_i^k, l in T_j} w[j, l] / lambda_{i,l}
-    with fallback w[i, l] when lambda_{i,l} = 0.
+    with fallback own[i, l] (= w[i, l] unless overridden) when
+    lambda_{i,l} = 0.
     """
     wm = jnp.where(masks, w, 0.0)
     agg = jnp.einsum("jn,ji->in", wm, a)  # sum of received coords
     cnt = jnp.einsum("jn,ji->in", masks.astype(w.dtype), a)  # lambda_{i,l}
-    return jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), w)
+    return jnp.where(cnt > 0, agg / jnp.maximum(cnt, 1.0), w if own is None else own)
 
 
 def naive_average(
@@ -176,6 +178,7 @@ def pme_average_pytree(
     a: jax.Array,
     p: float,
     mode: str = "bernoulli",
+    self_params: Optional[object] = None,
 ) -> object:
     """Apply PME leaf-wise to a node-stacked parameter pytree.
 
@@ -183,30 +186,52 @@ def pme_average_pytree(
     fraction p = s/n; the coordinate mask of sender j is regenerated from
     `key` fold_in'd with the leaf index, mirroring the seed-based wire
     format (only values + a seed move between nodes).
+
+    `self_params` overrides the receiver's *own* view: the lambda=0
+    fallback reads from it instead of `params`.  The bounded-staleness
+    path passes the delayed sender stack as `params` (what the network
+    transports) and the fresh parameters as `self_params` (a node always
+    knows its own current point) — delay then hits only communication,
+    never the local fill.  None keeps the classic single-stack semantics.
     """
     leaves, treedef = jax.tree_util.tree_flatten(params)
+    self_leaves = (
+        leaves if self_params is None
+        else jax.tree_util.tree_flatten(self_params)[0]
+    )
     m = leaves[0].shape[0]
     out = []
     for idx, leaf in enumerate(leaves):
         lkey = jax.random.fold_in(key, idx)
+        own = self_leaves[idx]
         if mode == "exact":
             flat = leaf.reshape(m, -1)
             n = flat.shape[1]
             s = max(1, int(round(p * n)))
             masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
-            if flat.size >= _KERNEL_MIN_ELEMS and jax.default_backend() != "cpu":
+            if (
+                flat.size >= _KERNEL_MIN_ELEMS
+                and jax.default_backend() != "cpu"
+                and self_params is None
+            ):
                 # hot path: fused Pallas kernel (1 HBM read + 1 write of the
                 # [m, n] operand).  Tiny leaves stay on the einsum path —
                 # kernel launch overhead dominates — and CPU always does:
                 # there the kernel only exists in (much slower) interpret
                 # mode, kept for correctness tests, not for this route.
+                # (The kernel computes the fallback from `w` internally, so
+                # a self-view override routes through the einsum instead.)
                 from repro.kernels.pme_average.ops import (
                     pme_average as pme_average_fused,
                 )
 
                 avg = pme_average_fused(flat, masks, a)
-            else:
+            elif self_params is None:
+                # positional-only call: drop-in average variants (e.g. the
+                # naive_average ablation) need not know about `own`
                 avg = pme_average(flat, masks, a)
+            else:
+                avg = pme_average(flat, masks, a, own=own.reshape(m, -1))
             out.append(avg.reshape(leaf.shape))
         else:
             # No reshape: keep the leaf's trailing structure (and thus its
@@ -224,7 +249,7 @@ def pme_average_pytree(
                 "j...,ji->i...", mask_t, a_t, preferred_element_type=jnp.float32
             )
             avg = jnp.where(
-                cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(leaf.dtype), leaf
+                cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(leaf.dtype), own
             )
             out.append(avg)
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -239,6 +264,7 @@ def pme_average_pytree_padded(
     mode: str = "bernoulli",
     pad: Optional[jax.Array] = None,  # [m, d] bool — structural padding
     impl: Optional[str] = None,       # gossip contraction (see core.mixing)
+    self_params: Optional[object] = None,
 ) -> object:
     """PME applied leaf-wise through the padded neighbor-exchange form.
 
@@ -251,15 +277,22 @@ def pme_average_pytree_padded(
     counts aggregated in one slot walk (two gathers per slot).
     Coordinate masks are drawn exactly as in the dense path (fold_in per
     leaf), so the two agree to fp tolerance for the same key.
+    `self_params` overrides the receiver's lambda=0 fallback view exactly
+    as in `pme_average_pytree` (delay hits only communication).
     """
     from repro.core.mixing import gather_terms
 
     leaves, treedef = jax.tree_util.tree_flatten(params)
+    self_leaves = (
+        leaves if self_params is None
+        else jax.tree_util.tree_flatten(self_params)[0]
+    )
     m, d = nbrs.shape
     sel_f = sel.astype(jnp.float32)
     out = []
     for idx, leaf in enumerate(leaves):
         lkey = jax.random.fold_in(key, idx)
+        own = self_leaves[idx]
         shape = leaf.shape
         if mode == "exact":
             flat = leaf.reshape(m, -1)
@@ -278,8 +311,9 @@ def pme_average_pytree_padded(
             [(sel_f, payload.astype(jnp.float32)), (sel_f, mask_f)],
             pad=pad, impl=impl,
         )
+        fallback = flat if self_params is None else own.reshape(flat.shape)
         avg = jnp.where(
-            cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(flat.dtype), flat
+            cnt > 0, (agg / jnp.maximum(cnt, 1.0)).astype(flat.dtype), fallback
         )
         out.append(avg.reshape(shape))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -44,16 +44,14 @@ Static scenarios (`is_static`) are handled by `Algorithm.bind` as the
 existing fixed-`Topology` path — the exact same program, bit-identical by
 construction.
 
-Fidelity caveat (surrogate-state algorithms): the simulation keeps ONE
-global copy of each node's public surrogate (CHOCO/BEER's hats, NIDS's
-difference-encoded u-hat).  In a real deployment every neighbor holds its
-own replica, and an innovation lost to a down link desyncs that replica
-until repaired.  Here a neighbor that misses an innovation reads the
-fully up-to-date surrogate as soon as the link is back, without the
-repair traffic ever being sent or charged — so under `edge_drop`/`churn`
-the compressed baselines' convergence is mildly optimistic and their
-realized wire bits a lower bound.  Per-receiver surrogate replicas
-([m, m, ...] state) would close this gap; see ROADMAP.
+Fidelity note (surrogate-state algorithms): on THIS path the simulation
+keeps ONE global copy of each node's public surrogate (CHOCO/BEER's
+hats, NIDS's difference-encoded u-hat), so a neighbor that misses an
+innovation reads the fully up-to-date surrogate as soon as the link is
+back — mildly optimistic convergence, lower-bound wire bits.  Binding a
+`repro.core.faults.FaultModel` closes this gap: message-level loss with
+per-receiver surrogate replicas that desync on a missed innovation and
+resync only through explicit, wire-charged repair traffic.
 """
 from __future__ import annotations
 
@@ -76,6 +74,7 @@ __all__ = [
     "list_scenarios",
     "make_scenario_arrays",
     "edge_uniform",
+    "sample_masks",
     "realize",
     "realization_from_masks",
     "realization_matrix",
@@ -251,15 +250,16 @@ def edge_uniform(key: jax.Array, nbrs: jax.Array) -> jax.Array:
     return u.reshape(m, d)
 
 
-def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realization:
-    """Sample step k's network realization (traceable; `k` may be traced).
+def sample_masks(
+    scenario: Scenario, arrays: ScenarioArrays, k: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample step k's raw (edge_up, alive, straggler) masks.
 
-    Edge survival is drawn once per *undirected* link via `edge_uniform`
-    (per-edge folded keys over the padded table), so both directions agree
-    and the realized adjacency stays symmetric.  Note: this per-edge
-    counter-mode draw replaced the original O(m²) uniform matrix; realized
-    masks for a given seed differ from the pre-fold goldens, and every
-    conformance test recomputes its expectation from this same path.
+    Factored out of `realize` so layers that *compose* with the scenario
+    draw (the fault-injection path folds node crashes into `alive` before
+    building weights) reuse the exact same PRNG discipline: same folds,
+    same splits, same draw order — a zero-rate scenario skips the draw
+    entirely, keeping the traced program identical to the static path.
     """
     m, d = arrays.nbrs.shape
     kk = jax.random.fold_in(arrays.key, k)
@@ -274,6 +274,20 @@ def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realiza
     edge_up = jnp.ones((m, d), bool)
     if scenario.edge_drop > 0.0:
         edge_up = edge_uniform(k_edge, arrays.nbrs) >= scenario.edge_drop
+    return edge_up, alive, straggler
+
+
+def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realization:
+    """Sample step k's network realization (traceable; `k` may be traced).
+
+    Edge survival is drawn once per *undirected* link via `edge_uniform`
+    (per-edge folded keys over the padded table), so both directions agree
+    and the realized adjacency stays symmetric.  Note: this per-edge
+    counter-mode draw replaced the original O(m²) uniform matrix; realized
+    masks for a given seed differ from the pre-fold goldens, and every
+    conformance test recomputes its expectation from this same path.
+    """
+    edge_up, alive, straggler = sample_masks(scenario, arrays, k)
     return realization_from_masks(arrays, edge_up, alive, straggler)
 
 

@@ -16,8 +16,10 @@ carry:
     process per base edge (good→bad w.p. `burst_down`, bad→good w.p.
     `burst_up`), geometric node sessions (up→down w.p. `leave`, down→up
     w.p. `rejoin`), optional mobility-style resampling of the active edge
-    subset every `resample_every` steps, an i.i.d. straggler draw, and
-    the staleness bound D (`staleness`).
+    subset every `resample_every` steps, an i.i.d. straggler draw or a
+    Markov straggler *session* chain (late→fresh w.p. `straggle_off`,
+    fresh→late w.p. `straggle_on`), and the staleness bound D
+    (`staleness`).
   * `TemporalState` — the per-edge/per-node Markov state + consecutive-
     straggle ages; a pure pytree of device arrays, threaded through the
     engine's auxiliary carry slot (no host round-trips per step).
@@ -80,6 +82,7 @@ __all__ = [
 _INIT_EDGE_FOLD = 0x7FFFFFFF
 _INIT_NODE_FOLD = 0x7FFFFFFE
 _MOBILITY_FOLD = 0x7FFFFFFD
+_INIT_STRAG_FOLD = 0x7FFFFFFC
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,13 +106,21 @@ class TemporalScenario:
     mobility_keep: float = 1.0  # P[base edge active within an epoch]
     # stragglers + bounded staleness
     straggler: float = 0.0    # i.i.d. P[node is late this step]
+    # Markov straggler *sessions* (geometric onset/recovery): a node that
+    # turns late stays late for a geometric holding time instead of
+    # re-drawing lateness i.i.d. every step.  Mutually exclusive with the
+    # i.i.d. `straggler` rate; the degenerate pair straggle_off = 1 −
+    # straggle_on reproduces the i.i.d. draw bitwise (same uniform region).
+    straggle_on: float = 0.0  # P[fresh -> late] per step
+    straggle_off: float = 0.5  # P[late -> fresh] per step (recovery)
     staleness: int = 0        # D: max delay mixed from the ring; 0 = the
     #                           i.i.d. semantics (late nodes excluded)
     seed: int = 0
 
     def __post_init__(self):
         for field in ("burst_down", "burst_up", "leave", "rejoin",
-                      "mobility_keep", "straggler"):
+                      "mobility_keep", "straggler", "straggle_on",
+                      "straggle_off"):
             v = getattr(self, field)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{field}={v} must be a probability in [0, 1]")
@@ -123,12 +134,20 @@ class TemporalScenario:
             raise ValueError("burst_up=0 would make bad links permanent")
         if self.leave > 0.0 and self.rejoin == 0.0:
             raise ValueError("rejoin=0 would make departures permanent")
+        if self.straggle_on > 0.0 and self.straggle_off == 0.0:
+            raise ValueError("straggle_off=0 would make lateness permanent")
+        if self.straggle_on > 0.0 and self.straggler > 0.0:
+            raise ValueError(
+                "straggler and straggle_on are mutually exclusive: pick the "
+                "i.i.d. rate or the Markov session chain, not both"
+            )
 
     @property
     def is_static(self) -> bool:
         """True iff every step realizes the base graph exactly."""
         return (
             self.burst_down == self.leave == self.straggler == 0.0
+            and self.straggle_on == 0.0
             and (self.resample_every == 0 or self.mobility_keep == 1.0)
         )
 
@@ -147,6 +166,12 @@ class TemporalScenario:
         """Stationary P[node down] of the session chain."""
         denom = self.leave + self.rejoin
         return self.leave / denom if denom > 0.0 else 0.0
+
+    @property
+    def stationary_late(self) -> float:
+        """Stationary P[node late] of the straggler session chain."""
+        denom = self.straggle_on + self.straggle_off
+        return self.straggle_on / denom if denom > 0.0 else 0.0
 
     @property
     def mean_burst_len(self) -> float:
@@ -171,6 +196,11 @@ TEMPORAL_PRESETS = {
     # 40% of nodes late each step, mixed at up to 3 steps of delay
     "stale_stragglers": TemporalScenario(
         name="stale_stragglers", straggler=0.4, staleness=3),
+    # sessioned lateness: mean late spell of 4 steps, ~29% late nodes in
+    # stationarity, mixed at up to 3 steps of delay
+    "straggle_sessions": TemporalScenario(
+        name="straggle_sessions", straggle_on=0.1, straggle_off=0.25,
+        staleness=3),
     "markov_harsh": TemporalScenario(
         name="markov_harsh", burst_down=0.08, burst_up=0.3,
         leave=0.05, rejoin=0.3, straggler=0.3, staleness=2),
@@ -196,6 +226,7 @@ class TemporalState(NamedTuple):
     edge_bad: jax.Array  # [m, d] bool — Gilbert–Elliott bad state per slot
     node_down: jax.Array  # [m] bool — session chain down state
     age: jax.Array        # [m] i32 — consecutive straggle count
+    late: jax.Array       # [m] bool — straggler session chain late state
 
 
 class TemporalCarry(NamedTuple):
@@ -237,7 +268,15 @@ def temporal_state_init(
             jax.random.fold_in(arrays.key, _INIT_NODE_FOLD), (m,)
         )
         node_down = u < scenario.stationary_down
-    return TemporalState(edge_bad, node_down, jnp.zeros((m,), jnp.int32))
+    late = jnp.zeros((m,), bool)
+    if scenario.straggle_on > 0.0:
+        u = jax.random.uniform(
+            jax.random.fold_in(arrays.key, _INIT_STRAG_FOLD), (m,)
+        )
+        late = u < scenario.stationary_late
+    return TemporalState(
+        edge_bad, node_down, jnp.zeros((m,), jnp.int32), late
+    )
 
 
 def advance(
@@ -272,9 +311,22 @@ def advance(
         node_down = jnp.where(
             ts.node_down, u < 1.0 - scenario.rejoin, u < scenario.leave
         )
-    straggler = jnp.zeros((m,), bool)
-    if scenario.straggler > 0.0:
+    late = ts.late
+    if scenario.straggle_on > 0.0:
+        # session chain over the same single k_strag uniform region the
+        # i.i.d. draw reads (bernoulli == uniform < p), so the degenerate
+        # pair straggle_off = 1 − straggle_on is bitwise the i.i.d. path
+        u = jax.random.uniform(k_strag, (m,))
+        late = jnp.where(
+            ts.late, u < 1.0 - scenario.straggle_off, u < scenario.straggle_on
+        )
+        straggler = late
+    elif scenario.straggler > 0.0:
         straggler = jax.random.bernoulli(k_strag, scenario.straggler, (m,))
+        late = straggler
+    else:
+        straggler = jnp.zeros((m,), bool)
+        late = jnp.zeros((m,), bool)
 
     edge_up = ~edge_bad
     if scenario.mobile:
@@ -295,7 +347,7 @@ def advance(
     excluded = straggler & ~delayed
     realization = realization_from_masks(arrays, edge_up, alive, excluded)
     tau = jnp.where(delayed, age, 0)
-    return TemporalState(edge_bad, node_down, age), realization, delayed, tau
+    return TemporalState(edge_bad, node_down, age, late), realization, delayed, tau
 
 
 def ring_init(params_stacked: object, staleness: int) -> Optional[object]:

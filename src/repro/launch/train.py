@@ -50,6 +50,7 @@ from repro.core.algorithms import (
     get_algorithm,
     list_algorithms,
 )
+from repro.core.faults import FaultModel
 from repro.core.scenarios import get_scenario, list_scenarios
 from repro.core.temporal import TemporalScenario
 from repro.core.topology import build_topology
@@ -127,6 +128,39 @@ def _scenario_from_args(args):
     )
 
 
+def _faults_from_args(args):
+    """Resolve the message-level fault flags into a FaultModel (or None).
+
+    --loss-rate draws i.i.d. per-direction message drops; --loss-burst
+    runs a Gilbert–Elliott lossy-link chain per directed slot; --crash
+    is a transient node-crash chain (state frozen while down — the local
+    checkpoint the node rejoins from); --msg-delay delays delivery only
+    (local compute never waits).  All compose with the base --scenario.
+    """
+    burst = _parse_rate_pair(args.loss_burst)
+    crash = _parse_rate_pair(args.crash)
+    delay_p, delay_d = 0.0, 0
+    if args.msg_delay is not None:
+        parts = args.msg_delay.split(",")
+        delay_p = float(parts[0])
+        delay_d = int(parts[1]) if len(parts) > 1 else 2
+    if args.loss_rate is None and burst is None and crash is None \
+            and args.msg_delay is None:
+        return None
+    return FaultModel(
+        name="cli",
+        loss=args.loss_rate or 0.0,
+        burst_down=burst[0] if burst else 0.0,
+        burst_up=burst[1] if burst else 0.5,
+        crash=crash[0] if crash else 0.0,
+        rejoin=crash[1] if crash else 0.5,
+        delay=delay_p,
+        max_delay=delay_d,
+        repair=args.repair,
+        seed=args.seed,
+    )
+
+
 def build_everything(args):
     cfg = get_config(args.arch, args.variant)
     if args.seq and cfg.arch_type == "vlm":
@@ -158,6 +192,7 @@ def build_everything(args):
     alg = get_algorithm(args.algo)
     hps = _hps_from_args(args.algo, args)
     scen = _scenario_from_args(args)
+    faults = _faults_from_args(args)
     params0 = init_params(jax.random.PRNGKey(args.seed), cfg)
     batch0 = make_batch(0) if alg.needs_batch0 else None
     if args.seeds > 1:
@@ -168,12 +203,14 @@ def build_everything(args):
             grad_fn, topo, [hps],
             seeds=[args.seed + 1 + i for i in range(args.seeds)],
             mixing=args.mixing, seed=args.seed, scenario=scen,
+            faults=faults,
         )
         state = bound.init(params0, m, batch0)
     else:
         bound = alg.bind(
             grad_fn, topo, hps,
             mixing=args.mixing, seed=args.seed, scenario=scen,
+            faults=faults,
         )
         stacked = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), params0
@@ -219,6 +256,28 @@ def main() -> None:
                          "steps (0 = off)")
     ap.add_argument("--mobility-keep", type=float, default=0.7,
                     help="P[base edge active within a mobility epoch]")
+    ap.add_argument("--loss-rate", type=float, default=None,
+                    help="message-level faults: P[a directed message is "
+                         "dropped] per step (asymmetric per direction)")
+    ap.add_argument("--loss-burst", default=None, metavar="DOWN[,UP]",
+                    help="Gilbert-Elliott lossy-link chain per directed "
+                         "slot: P[good->lossy][,P[lossy->good]] per step")
+    ap.add_argument("--crash", default=None, metavar="RATE[,REJOIN]",
+                    help="transient node crashes: P[up->crashed]"
+                         "[,P[crashed->recovered]] per step; crashed state "
+                         "freezes (local-checkpoint catch-up on rejoin)")
+    ap.add_argument("--msg-delay", default=None, metavar="P[,D]",
+                    help="delayed delivery: P[a node's outgoing messages "
+                         "are late][,staleness bound D (default 2)]; "
+                         "message-only — local compute never waits")
+    ap.add_argument("--repair", dest="repair", action="store_true",
+                    default=True,
+                    help="surrogate algorithms resync desynced per-receiver "
+                         "replicas via full-surrogate retransmission, "
+                         "charged on the wire (default)")
+    ap.add_argument("--no-repair", dest="repair", action="store_false",
+                    help="disable replica repair: lost innovations desync "
+                         "surrogates permanently")
     ap.add_argument("--seeds", type=int, default=1,
                     help="train N seed replicas as lanes of ONE batched "
                          "jitted scan (vmap-over-lanes engine); the log "
@@ -244,6 +303,13 @@ def main() -> None:
     lanes = bound.lanes if args.seeds > 1 else None
     wire_per_step = bound.wire_bits(n_params)
     scen_tag = bound.scenario.name if bound.dynamic else "static"
+    if bound.faulty:
+        fm = bound.faults
+        scen_tag += (
+            f"+faults(loss={fm.loss}, burst={fm.burst_down}/{fm.burst_up}, "
+            f"crash={fm.crash}/{fm.rejoin}, delay={fm.delay}<= {fm.max_delay}, "
+            f"repair={fm.repair})"
+        )
     print(
         f"[train] algo={args.algo} mixing={args.mixing} nodes={args.nodes} "
         f"scenario={scen_tag} "
@@ -254,6 +320,8 @@ def main() -> None:
         flush=True,
     )
 
+    carries_aux = bound.temporal or getattr(bound, "faulty", False)
+    aux = bound.aux_init(state) if carries_aux else None
     start = 0
     if args.ckpt_dir:
         os.makedirs(args.ckpt_dir, exist_ok=True)
@@ -261,18 +329,24 @@ def main() -> None:
 
         last = latest_step(args.ckpt_dir)
         if last is not None:
-            state = restore_checkpoint(args.ckpt_dir, state, last)
+            # the auxiliary carry (fault/temporal Markov state + staleness
+            # ring) is checkpointed alongside the state, so a resumed run
+            # continues the exact chains — the crash-rejoin catch-up path
+            # restores from the same store
+            if carries_aux:
+                restored = restore_checkpoint(
+                    args.ckpt_dir, {"state": state, "aux": aux}, last
+                )
+                state, aux = restored["state"], restored["aux"]
+            else:
+                state = restore_checkpoint(args.ckpt_dir, state, last)
             start = last
             print(f"[train] resumed from step {last}")
 
     runner = engine.make_scan_runner(
         bound.step, chunk_size=args.chunk, step_takes_index=bound.dynamic,
-        carries_aux=bound.temporal, lanes=lanes,
+        carries_aux=carries_aux, lanes=lanes,
     )
-    # the temporal carry (Markov chain state + staleness ring) threads
-    # through the scan and across chunk dispatches; it is not checkpointed,
-    # so a resumed run restarts the chains from their stationary draw.
-    aux = bound.aux_init(state) if bound.temporal else None
     log_every = max(args.log_every or args.chunk, 1)
     t0 = time.time()
     k = start
@@ -316,6 +390,14 @@ def main() -> None:
                 extra += f" alive={last('alive_nodes'):.0f}"
             if "stale_nodes" in metrics:
                 extra += f" stale={last('stale_nodes'):.0f}"
+            if "crashed_nodes" in metrics:
+                extra += f" crashed={last('crashed_nodes'):.0f}"
+            if "dropped_msgs" in metrics:
+                extra += f" dropped={last('dropped_msgs'):.0f}"
+            if "mean_drift" in metrics:
+                extra += f" drift={last('mean_drift'):.3f}"
+            if "surrogate_desync" in metrics:
+                extra += f" desync={last('surrogate_desync'):.3e}"
             if "sigma_mean" in metrics:
                 extra += f" sigma={last('sigma_mean'):.2f}"
             print(
@@ -325,7 +407,10 @@ def main() -> None:
                 flush=True,
             )
         if args.ckpt_dir and k >= next_ckpt:
-            save_checkpoint(args.ckpt_dir, k, state)
+            save_checkpoint(
+                args.ckpt_dir, k,
+                {"state": state, "aux": aux} if carries_aux else state,
+            )
             next_ckpt = (k // args.ckpt_every + 1) * args.ckpt_every
     if stale_hist is not None:
         total = max(float(stale_hist.sum()), 1.0)

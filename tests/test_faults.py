@@ -1,0 +1,379 @@
+"""Message-level fault-injection conformance suite.
+
+Pins the properties `repro.core.faults` must guarantee:
+
+  * `FaultModel` validation, presets, static gating (a zero-rate model
+    binds to the fault-free program — zero-loss runs are bit-identical
+    to the pre-fault-layer path);
+  * the faulted realization is *row*-stochastic by construction under
+    arbitrary asymmetric per-direction loss, with the column-sum defect
+    reported exactly and accumulated into the mean-drift tracker;
+  * the Gilbert–Elliott lossy-link chain matches its stationary law and
+    burst persistence;
+  * crashed nodes freeze bitwise (the local checkpoint they rejoin
+    from) and catch up by mixing again after rejoin;
+  * identical parameters are a per-node fixed point for the
+    row-stochastic mixers (PaME / D-PSGD / DFedSAM) under arbitrary
+    loss — the structural graceful-degradation invariant — while
+    direct parameter mixing under asymmetric loss leaks the global
+    mean by exactly the tracked column defect;
+  * host and scan drivers agree on a fault-injected trajectory (the
+    fault Markov state and delay ring ride the scan carry), invariant
+    to the chunk size;
+  * m=2 and loss=1 (fully partitioned) edge cases stay finite and
+    degenerate to local-only updates;
+  * a seeded degradation-regression guard: PaME's final objective at
+    20% loss stays within a pinned factor of the fault-free run (the
+    check CI runs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core.faults import (
+    FAULT_PRESETS,
+    FaultModel,
+    advance_faults,
+    fault_matrix,
+    fault_state_init,
+    get_fault_model,
+    list_fault_models,
+)
+from repro.core.scenarios import Scenario, make_scenario_arrays, sample_masks
+from repro.core.topology import build_topology
+
+M = 8
+
+
+def _zero_grad_fn(w, batch, key):
+    del batch, key
+    return jnp.zeros(()), jax.tree_util.tree_map(jnp.zeros_like, w)
+
+
+def _linreg(m, n, spn=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w_star = rng.standard_normal(n)
+    a = rng.standard_normal((m, spn, n))
+    y = a @ w_star + 0.1 * rng.standard_normal((m, spn))
+    batch = (jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32))
+
+    def grad_fn(w, b, key):
+        aa, yy = b
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    return batch, grad_fn
+
+
+def _static_arrays(topo):
+    scen = Scenario(name="static")
+    return scen, make_scenario_arrays(topo, scen)
+
+
+def test_fault_model_validation_and_presets():
+    with pytest.raises(ValueError, match="probability"):
+        FaultModel(loss=1.5)
+    with pytest.raises(ValueError, match="max_delay"):
+        FaultModel(max_delay=-1)
+    with pytest.raises(ValueError, match="max_delay"):
+        FaultModel(delay=0.2)  # delay without a staleness bound
+    with pytest.raises(ValueError, match="permanent"):
+        FaultModel(burst_down=0.1, burst_up=0.0)
+    with pytest.raises(ValueError, match="permanent"):
+        FaultModel(crash=0.1, rejoin=0.0)
+    with pytest.raises(ValueError, match="unknown fault"):
+        get_fault_model("nope")
+    for name in list_fault_models():
+        fm = get_fault_model(name)
+        assert fm.name == name
+        assert not fm.is_static
+    assert FaultModel().is_static
+    assert FaultModel(repair=False).is_static  # repair alone fires nothing
+    fm = FaultModel(burst_down=0.1, burst_up=0.3)
+    assert abs(fm.stationary_lossy - 0.25) < 1e-12
+    assert set(FAULT_PRESETS) == set(list_fault_models())
+
+
+def test_faulted_matrix_row_stochastic_col_defect_asymmetric():
+    """Every faulted realization is row-stochastic to machine precision
+    under i.i.d. per-direction loss; the reported column defect equals
+    the materialized matrix's |colsum - 1| mass, `dropped` counts the
+    realized-but-lost directed messages, and the drift tracker is their
+    running defect sum."""
+    fm = FaultModel(loss=0.3, seed=1)
+    topo = build_topology("erdos_renyi", 12, p=0.5, seed=0)
+    scen, arrays = _static_arrays(topo)
+    key = jax.random.PRNGKey(fm.seed)
+    fs = fault_state_init(fm, arrays, key)
+    saw_asym = saw_drop = 0
+    drift = 0.0
+    for k in range(8):
+        e, a, s = sample_masks(scen, arrays, k)
+        fs, fr = advance_faults(fm, arrays, fs, key, k, e, a, s)
+        b = np.asarray(fault_matrix(arrays, fr), np.float64)
+        np.testing.assert_allclose(b.sum(axis=1), 1.0, atol=1e-6)
+        assert b.min() >= 0.0
+        defect = np.abs(b.sum(axis=0) - 1.0).sum()
+        np.testing.assert_allclose(float(fr.col_defect), defect, atol=1e-4)
+        drift += float(fr.col_defect)
+        saw_asym += int(not np.allclose(b, b.T))
+        saw_drop += int(fr.dropped)
+        # realized-but-lost messages are exactly the dropped count
+        lost = np.asarray(fr.base.edge_alive) & ~np.asarray(fr.recv_ok)
+        assert int(fr.dropped) == int(lost.sum())
+    assert saw_asym > 0       # per-direction draws break symmetry
+    assert saw_drop > 0
+    np.testing.assert_allclose(float(fs.drift), drift, rtol=1e-5)
+
+
+def test_gilbert_elliott_link_occupancy_and_persistence():
+    """The lossy-link burst chain matches its stationary occupancy and the
+    one-step persistence P[lossy -> lossy] = 1 - burst_up."""
+    fm = FaultModel(burst_down=0.1, burst_up=0.25, seed=3)
+    topo = build_topology("ring", 10)
+    scen, arrays = _static_arrays(topo)
+    key = jax.random.PRNGKey(fm.seed)
+
+    def body(fs, k):
+        e, a, s = sample_masks(scen, arrays, k)
+        fs2, _ = advance_faults(fm, arrays, fs, key, k, e, a, s)
+        return fs2, fs2.link_bad
+
+    fs0 = fault_state_init(fm, arrays, key)
+    _, bad = jax.jit(
+        lambda f0: jax.lax.scan(body, f0, jnp.arange(3000))
+    )(fs0)
+    bad = np.asarray(bad)[:, np.asarray(arrays.valid)]
+    occ = bad.mean()
+    assert abs(occ - fm.stationary_lossy) < 0.03, (occ, fm.stationary_lossy)
+    stay = (bad[:-1] & bad[1:]).sum() / max(bad[:-1].sum(), 1)
+    assert abs(stay - (1.0 - fm.burst_up)) < 0.03, stay
+
+
+def test_static_fault_model_binds_to_fault_free_program():
+    """Acceptance: a zero-rate FaultModel binds to the plain program — the
+    same-seed run is bit-identical to the pre-fault-layer path."""
+    m, n = M, 12
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=0)
+    batch, grad_fn = _linreg(m, n)
+    for name, hps in (("pame", ALG.PaMEHp(nu=0.5, p=0.3, gamma=1.01,
+                                          sigma0=8.0)),
+                      ("choco", ALG.ChocoHp(lr=0.05))):
+        plain = ALG.get_algorithm(name).bind(grad_fn, topo, hps)
+        gated = ALG.get_algorithm(name).bind(
+            grad_fn, topo, hps, faults=FaultModel()
+        )
+        assert not gated.faulty and not gated.carries_aux
+        stacked = jnp.zeros((m, n))
+        s_a = plain.init(jax.random.PRNGKey(0), stacked, batch)
+        s_b = gated.init(jax.random.PRNGKey(0), stacked, batch)
+        for _ in range(3):
+            s_a, _ = plain.step(s_a, batch)
+            s_b, _ = gated.step(s_b, batch)
+        np.testing.assert_array_equal(
+            np.asarray(plain.params_of(s_a)), np.asarray(gated.params_of(s_b))
+        )
+
+
+def test_crash_freeze_bitwise_and_rejoin_catchup():
+    """Crashed nodes freeze bitwise (weight-1 self-loop, state untouched =
+    the local checkpoint they rejoin from); on rejoin they mix again and
+    their parameters move.  Verified against an externally replayed fault
+    chain (same key stream)."""
+    m, n = M, 10
+    fm = FaultModel(crash=0.3, rejoin=0.4, seed=5)
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=1)
+    batch, grad_fn = _linreg(m, n)
+    bound = ALG.get_algorithm("dpsgd").bind(
+        grad_fn, topo, ALG.DPSGDHp(lr=0.1), faults=fm
+    )
+    assert bound.faulty and bound.carries_aux
+    arrays = bound.scen_arrays
+    fs = fault_state_init(fm, arrays, bound.fault_key)
+    state = bound.init(jax.random.PRNGKey(0), jnp.zeros((m, n)))
+    aux = bound.aux_init(state)
+    prev_crashed = np.zeros(m, bool)
+    saw_crash = saw_rejoin = 0
+    for k in range(10):
+        e, a, s = sample_masks(bound.scenario, arrays, k)
+        fs, fr = advance_faults(fm, arrays, fs, bound.fault_key, k, e, a, s)
+        crashed = ~np.asarray(fr.base.alive)
+        prev = np.asarray(state.params)
+        state, metrics, aux = bound.step(state, batch, k, aux)
+        cur = np.asarray(state.params)
+        np.testing.assert_array_equal(cur[crashed], prev[crashed])
+        rejoined = prev_crashed & ~crashed
+        for i in np.nonzero(rejoined)[0]:
+            assert not np.array_equal(cur[i], prev[i])  # catching up again
+        assert int(metrics["crashed_nodes"]) == int(np.asarray(fs.crashed).sum())
+        saw_crash += int(crashed.sum())
+        saw_rejoin += int(rejoined.sum())
+        prev_crashed = crashed
+    assert saw_crash > 0 and saw_rejoin > 0
+
+
+@pytest.mark.parametrize("name", ["pame", "dpsgd", "dfedsam"])
+def test_identical_params_pinned_under_arbitrary_loss(name):
+    """The graceful-degradation invariant: row-stochastic mixers (PaME's
+    count-normalized average, D-PSGD/DFedSAM under the per-receiver
+    renormalized weights) hold identical parameters as a per-node fixed
+    point under ANY asymmetric loss pattern — lost messages shrink the
+    count / fold mass into the self slot, never skew the average."""
+    m, n = M, 12
+    fm = FaultModel(loss=0.3, burst_down=0.1, burst_up=0.3, crash=0.1,
+                    rejoin=0.4, seed=2)
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=0)
+    hps = {"pame": ALG.PaMEHp(nu=0.5, p=0.3, gamma=1.01, sigma0=8.0)}.get(name)
+    bound = ALG.get_algorithm(name).bind(
+        _zero_grad_fn, topo, hps, faults=fm
+    )
+    batch = {"x": jnp.zeros((m, 2), jnp.float32)}
+    rng = np.random.default_rng(3)
+    w0 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    state, hist = bound.run(
+        jax.random.PRNGKey(0), w0, m, lambda k: batch, 6,
+        tol_std=0.0, chunk_size=3,
+    )
+    out = np.asarray(bound.params_of(state))
+    np.testing.assert_allclose(
+        out, np.broadcast_to(np.asarray(w0), out.shape), atol=2e-5
+    )
+    assert sum(hist["dropped_msgs"]) > 0  # faults actually fired
+
+
+def test_mean_drift_tracks_column_defect():
+    """Direct parameter mixing under asymmetric loss leaks the global
+    mean; the engine's `mean_drift` tracker is the running column-defect
+    sum and grows monotonically while messages drop."""
+    m, n = M, 12
+    fm = FaultModel(loss=0.3, seed=4)
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=2)
+    bound = ALG.get_algorithm("dpsgd").bind(
+        _zero_grad_fn, topo, ALG.DPSGDHp(lr=0.1), faults=fm
+    )
+    batch = {"x": jnp.zeros((m, 2), jnp.float32)}
+    rng = np.random.default_rng(1)
+    stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    state = bound.init(jax.random.PRNGKey(0), stacked)
+    aux = bound.aux_init(state)
+    drifts, defects, dropped = [], [], []
+    for k in range(6):
+        state, metrics, aux = bound.step(state, batch, k, aux)
+        drifts.append(float(metrics["mean_drift"]))
+        defects.append(float(metrics["col_defect"]))
+        dropped.append(int(metrics["dropped_msgs"]))
+    np.testing.assert_allclose(drifts, np.cumsum(defects), rtol=1e-5)
+    assert all(b >= a for a, b in zip(drifts, drifts[1:]))
+    assert sum(dropped) > 0 and drifts[-1] > 0.0
+    # the mean actually moved (zero grads: only the column defect can)
+    mean0 = np.asarray(stacked).mean(axis=0)
+    mean1 = np.asarray(state.params).mean(axis=0)
+    assert float(np.abs(mean1 - mean0).max()) > 1e-4
+
+
+def test_fault_host_equals_scan_and_chunk_invariance():
+    """Host and scan drivers produce identical fault-injected trajectories
+    (fault Markov state + delay ring in the scan carry), invariant to the
+    chunk size — including the repair/desync accounting."""
+    m, n = M, 14
+    fm = FaultModel(loss=0.15, burst_down=0.1, burst_up=0.3, crash=0.1,
+                    rejoin=0.4, delay=0.3, max_delay=2, seed=2)
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=1)
+    batch, grad_fn = _linreg(m, n)
+    bound = ALG.get_algorithm("choco").bind(
+        grad_fn, topo, ALG.ChocoHp(lr=0.05), faults=fm
+    )
+    outs = {}
+    for tag, kwargs in (
+        ("host", dict(driver="host")),
+        ("scan2", dict(driver="scan", chunk_size=2)),
+        ("scan4", dict(driver="scan", chunk_size=4)),
+    ):
+        _, hist = bound.run(
+            jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 8,
+            tol_std=0.0, **kwargs,
+        )
+        outs[tag] = hist
+    for tag in ("scan2", "scan4"):
+        np.testing.assert_allclose(
+            outs[tag]["loss"], outs["host"]["loss"], rtol=1e-5, atol=1e-7
+        )
+        for key in ("wire_bits", "repair_bits", "dropped_msgs",
+                    "crashed_nodes", "stale_nodes", "col_defect"):
+            np.testing.assert_allclose(
+                outs[tag][key], outs["host"][key], rtol=1e-5, atol=1e-6,
+                err_msg=key,
+            )
+        np.testing.assert_allclose(
+            outs[tag]["surrogate_desync"], outs["host"]["surrogate_desync"],
+            rtol=1e-4, atol=1e-6,
+        )
+    hist = outs["scan4"]
+    assert sum(hist["dropped_msgs"]) > 0
+    assert hist["wire_bits_total"] == sum(hist["wire_bits"])
+
+
+def test_full_partition_and_m2_edge_cases():
+    """loss=1 fully partitions the network: every row degenerates to a
+    weight-1 self-loop, zero-gradient parameters are bitwise frozen, and
+    PaME's count-normalized fallback keeps it finite and pinned.  The
+    m=2 single-link graph runs through the same path."""
+    for m in (2, 6):
+        topo = build_topology("complete", m)
+        fm = FaultModel(loss=1.0, seed=0)
+        n = 8
+        rng = np.random.default_rng(m)
+        stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        bound = ALG.get_algorithm("dpsgd").bind(
+            _zero_grad_fn, topo, ALG.DPSGDHp(lr=0.1), faults=fm
+        )
+        batch = {"x": jnp.zeros((m, 2), jnp.float32)}
+        state = bound.init(jax.random.PRNGKey(0), stacked)
+        aux = bound.aux_init(state)
+        for k in range(3):
+            state, metrics, aux = bound.step(state, batch, k, aux)
+            assert int(metrics["dropped_msgs"]) == int(
+                np.asarray(bound.scen_arrays.valid).sum()
+            )
+        np.testing.assert_array_equal(np.asarray(state.params),
+                                      np.asarray(stacked))
+        # PaME stays finite and pinned from identical params
+        pame = ALG.get_algorithm("pame").bind(
+            _zero_grad_fn, topo,
+            ALG.PaMEHp(nu=0.5, p=0.5, gamma=1.01, sigma0=8.0), faults=fm,
+        )
+        w0 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        st, hist = pame.run(
+            jax.random.PRNGKey(0), w0, m, lambda k: batch, 3, tol_std=0.0
+        )
+        out = np.asarray(pame.params_of(st))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(
+            out, np.broadcast_to(np.asarray(w0), out.shape), atol=2e-5
+        )
+
+
+def test_degradation_regression_pame_seeded():
+    """Seeded degradation-regression guard (run in CI): PaME's final
+    objective under 20% message loss + 1% crashes stays within a pinned
+    factor of the fault-free same-seed run."""
+    m, n = M, 12
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=0)
+    batch, grad_fn = _linreg(m, n, seed=1)
+    hps = ALG.PaMEHp(nu=0.5, p=0.3, gamma=1.01, sigma0=8.0)
+    finals = {}
+    for tag, fm in (
+        ("clean", None),
+        ("lossy", FaultModel(loss=0.2, crash=0.01, rejoin=0.3, seed=0)),
+    ):
+        bound = ALG.get_algorithm("pame").bind(grad_fn, topo, hps, faults=fm)
+        _, hist = bound.run(
+            jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 40,
+            tol_std=0.0,
+        )
+        finals[tag] = float(hist["loss"][-1])
+    assert np.isfinite(finals["lossy"])
+    # pinned tolerance: graceful degradation, not divergence
+    assert finals["lossy"] <= 1.5 * finals["clean"] + 1e-2, finals

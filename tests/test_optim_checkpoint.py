@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.checkpoint.store import latest_step
+from repro.checkpoint.store import CheckpointCorruptError, latest_step
 from repro.optim import adam, apply_updates, momentum, sgd
 
 
@@ -52,6 +52,90 @@ def test_checkpoint_shape_mismatch_rejected():
         bad = {"a": jnp.zeros((4,))}
         with pytest.raises(ValueError):
             restore_checkpoint(d, bad)
+
+
+def _leaf_files(step_dir):
+    return sorted(f for f in os.listdir(step_dir) if f.endswith(".npy"))
+
+
+def test_checkpoint_save_is_atomic_no_tmp_left():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, tree)
+        assert not [x for x in os.listdir(d) if x.endswith(".tmp")]
+        # a stale tmp dir from a crashed save is invisible to latest_step
+        os.makedirs(os.path.join(d, "step_000000009.tmp"))
+        assert latest_step(d) == 3
+
+
+def test_checkpoint_crc_mismatch_detected():
+    """A bit-flip in a leaf payload (valid .npy header, wrong bytes) is
+    caught by the per-leaf crc32, not silently restored."""
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        fpath = os.path.join(step_dir, _leaf_files(step_dir)[0])
+        with open(fpath, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            flipped = f.read(1)[0] ^ 0xFF
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([flipped]))
+        with pytest.raises(CheckpointCorruptError, match="crc32 mismatch"):
+            restore_checkpoint(d, tree)
+
+
+def test_checkpoint_truncated_leaf_detected():
+    tree = {"a": jnp.arange(64, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        fpath = os.path.join(step_dir, _leaf_files(step_dir)[0])
+        with open(fpath, "r+b") as f:
+            f.truncate(os.path.getsize(fpath) - 40)
+        with pytest.raises(CheckpointCorruptError, match="truncated"):
+            restore_checkpoint(d, tree)
+
+
+def test_checkpoint_missing_leaf_and_manifest_detected():
+    tree = {"a": jnp.arange(4, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        os.remove(os.path.join(step_dir, _leaf_files(step_dir)[0]))
+        with pytest.raises(CheckpointCorruptError, match="missing"):
+            restore_checkpoint(d, tree)
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        with open(os.path.join(step_dir, "manifest.json"), "w") as f:
+            f.write("{not json")
+        with pytest.raises(CheckpointCorruptError, match="not valid JSON"):
+            restore_checkpoint(d, tree)
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        os.remove(os.path.join(step_dir, "manifest.json"))
+        with pytest.raises(CheckpointCorruptError, match="manifest"):
+            restore_checkpoint(d, tree)
+    # no checkpoint at all stays a FileNotFoundError, not corruption
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(d, tree)
+
+
+def test_checkpoint_backward_compat_manifest_without_crc():
+    """Manifests written before checksumming restore cleanly: the crc
+    check is skipped for leaves with no crc32 key."""
+    import json
+
+    tree = {"a": jnp.arange(5, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        step_dir = save_checkpoint(d, 1, tree)
+        mpath = os.path.join(step_dir, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for leaf in manifest["leaves"]:
+            leaf.pop("crc32")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        back = restore_checkpoint(d, jax.tree_util.tree_map(jnp.zeros_like, tree))
+        np.testing.assert_allclose(np.asarray(back["a"]), np.asarray(tree["a"]))
 
 
 def test_train_driver_resume_consistency():

@@ -1,0 +1,273 @@
+"""Per-receiver surrogate-replica conformance suite.
+
+Pins the properties the replicated CHOCO/BEER/ANQ-NIDS variants must
+guarantee (`repro.core.faults.rep_*`):
+
+  * with faults bound but zero *actual* loss (a lossy-link chain whose
+    bad state never drops), the replicated programs reproduce the
+    classic single-surrogate trajectories to float tolerance — the
+    replica plumbing itself is free;
+  * the acceptance conformance: under 10% asymmetric message loss the
+    surrogate replicas desync (desync metric > 0) and the ack/repair
+    protocol spends real wire bits (repair traffic > 0), while PaME
+    under the identical fault stream needs neither;
+  * repair unit semantics: a lost innovation sets the pending flag and
+    desyncs the replica; the next delivered message carries the full
+    surrogate and resyncs it *exactly* (desync back to 0, pending
+    cleared), charged at the uncompressed Eq.-(8) rate;
+  * with repair disabled the desync is permanent (and free);
+  * a batched fault-injected lane is bitwise the corresponding
+    unbatched run (per-seed fault key folding).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core import faults as flt
+from repro.core.compression import identity
+from repro.core.pme import message_bits
+from repro.core.scenarios import Scenario, make_scenario_arrays, sample_masks
+from repro.core.topology import build_topology
+
+M = 8
+
+
+def _zero_grad_fn(w, batch, key):
+    del batch, key
+    return jnp.zeros(()), jax.tree_util.tree_map(jnp.zeros_like, w)
+
+
+def _linreg(m, n, spn=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w_star = rng.standard_normal(n)
+    a = rng.standard_normal((m, spn, n))
+    y = a @ w_star + 0.1 * rng.standard_normal((m, spn))
+    batch = (jnp.asarray(a, jnp.float32), jnp.asarray(y, jnp.float32))
+
+    def grad_fn(w, b, key):
+        aa, yy = b
+        r = aa @ w - yy
+        return 0.5 * jnp.mean(r**2), aa.T @ r / aa.shape[0]
+
+    return batch, grad_fn
+
+
+HPS = {
+    "choco": ALG.ChocoHp(lr=0.05, gossip_gamma=0.3, comp_frac=0.3),
+    "beer": ALG.BeerHp(lr=0.05, gossip_gamma=0.4, comp_frac=0.2),
+    "anq_nids": ALG.AnqNidsHp(lr=0.1, qsgd_levels=16),
+}
+
+# a non-static model whose lossy state never actually drops: the fault
+# path runs end to end, yet every message is delivered
+NO_ACTUAL_LOSS = flt.FaultModel(
+    name="noop", burst_down=0.3, burst_up=0.3, loss_bad=0.0, seed=0
+)
+
+
+@pytest.mark.parametrize("name", sorted(HPS))
+def test_zero_actual_loss_replicated_matches_classic(name):
+    """Replicated programs with every message delivered reproduce the
+    classic single-surrogate trajectory: replicas stay exact copies, so
+    receiver-side mixing equals the global-surrogate mixing."""
+    m, n = M, 12
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=0)
+    batch, grad_fn = _linreg(m, n)
+    classic = ALG.get_algorithm(name).bind(grad_fn, topo, HPS[name])
+    faulted = ALG.get_algorithm(name).bind(
+        grad_fn, topo, HPS[name], faults=NO_ACTUAL_LOSS
+    )
+    assert faulted.faulty
+    stacked = jnp.zeros((m, n))
+    s_c = classic.init(jax.random.PRNGKey(0), stacked, batch)
+    s_f = faulted.init(jax.random.PRNGKey(0), stacked, batch)
+    aux = faulted.aux_init(s_f)
+    for k in range(6):
+        s_c, m_c = classic.step(s_c, batch)
+        s_f, m_f, aux = faulted.step(s_f, batch, k, aux)
+        np.testing.assert_allclose(
+            np.asarray(classic.params_of(s_c)),
+            np.asarray(faulted.params_of(s_f)),
+            rtol=1e-5, atol=1e-6, err_msg=f"step {k}",
+        )
+        assert float(m_f["surrogate_desync"]) < 1e-8
+        assert float(m_f["repair_bits"]) == 0.0
+        assert int(m_f["dropped_msgs"]) == 0
+
+
+@pytest.mark.parametrize("name", sorted(HPS))
+def test_lost_innovations_are_not_free(name):
+    """Acceptance conformance: 10% asymmetric loss desyncs the surrogate
+    replicas (desync > 0) and forces wire-charged repair traffic
+    (repair bits > 0) — the cost the symmetric edge-removal scenario
+    model could never see."""
+    m, n = M, 12
+    fm = flt.FaultModel(loss=0.1, seed=1)
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=0)
+    batch, grad_fn = _linreg(m, n)
+    bound = ALG.get_algorithm(name).bind(
+        grad_fn, topo, HPS[name], faults=fm
+    )
+    _, hist = bound.run(
+        jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 10,
+        tol_std=0.0,
+    )
+    assert sum(hist["dropped_msgs"]) > 0
+    assert max(hist["surrogate_desync"]) > 0.0
+    assert sum(hist["repair_bits"]) > 0.0
+    # repair rides on top of the innovation traffic
+    assert hist["wire_bits_total"] > sum(
+        w - r for w, r in zip(hist["wire_bits"], hist["repair_bits"])
+    )
+
+
+def test_pame_needs_no_repair_under_same_faults():
+    """PaME under the identical fault stream: no replicas, no repair keys
+    in its history — lost messages only shrink the PME counts."""
+    m, n = M, 12
+    fm = flt.FaultModel(loss=0.1, seed=1)
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=0)
+    batch, grad_fn = _linreg(m, n)
+    bound = ALG.get_algorithm("pame").bind(
+        grad_fn, topo, ALG.PaMEHp(nu=0.5, p=0.3, gamma=1.01, sigma0=8.0),
+        faults=fm,
+    )
+    _, hist = bound.run(
+        jax.random.PRNGKey(0), jnp.zeros(n), m, lambda k: batch, 10,
+        tol_std=0.0,
+    )
+    assert sum(hist["dropped_msgs"]) > 0
+    assert "repair_bits" not in hist
+    assert "surrogate_desync" not in hist
+    assert all(np.isfinite(hist["loss"]))
+
+
+def _clean_fault_realization(arrays, scen, k=0):
+    """A FaultRealization over the static base graph with every message
+    delivered (loss model that can never drop)."""
+    fm = flt.FaultModel(burst_down=0.1, burst_up=0.9, loss_bad=0.0, seed=0)
+    fs = flt.fault_state_init(fm, arrays, jax.random.PRNGKey(0))
+    e, a, s = sample_masks(scen, arrays, k)
+    _, fr = flt.advance_faults(
+        fm, arrays, fs, jax.random.PRNGKey(0), k, e, a, s
+    )
+    assert bool(np.asarray(fr.recv_ok)[np.asarray(arrays.valid)].all())
+    return fr
+
+
+def test_repair_resyncs_exactly_and_is_wire_charged():
+    """Unit semantics of one lost message: pending set + desync > 0 on the
+    loss step; the next delivered message repairs the replica *exactly*
+    (desync == 0, pending cleared), charged one full Eq.-(8) message."""
+    m, n = 4, 6
+    topo = build_topology("complete", m)
+    scen = Scenario(name="static")
+    arrays = make_scenario_arrays(topo, scen)
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    comp = identity()
+    batch = None
+    state = flt.rep_choco_init(jax.random.PRNGKey(0), stacked, arrays)
+
+    fr_clean = _clean_fault_realization(arrays, scen)
+    drop = np.zeros(np.asarray(arrays.nbrs).shape, bool)
+    drop[0, 0] = True  # receiver 0 loses the message from nbrs[0, 0]
+    fr_lost = fr_clean._replace(
+        recv_ok=jnp.asarray(np.asarray(fr_clean.recv_ok) & ~drop)
+    )
+    innov = float(message_bits(n, n, 64))
+
+    state, m1 = flt.rep_choco_step(
+        state, batch, _zero_grad_fn, 0.1, comp, 0.5, fr_lost, arrays,
+        innov, True,
+    )
+    assert float(m1["surrogate_desync"]) > 0.0
+    assert float(m1["repair_bits"]) == 0.0  # nothing pending before the loss
+    np.testing.assert_array_equal(np.asarray(state.pending), drop)
+
+    state, m2 = flt.rep_choco_step(
+        state, batch, _zero_grad_fn, 0.1, comp, 0.5, fr_clean, arrays,
+        innov, True,
+    )
+    assert float(m2["surrogate_desync"]) == 0.0
+    assert float(m2["repair_bits"]) == innov  # one full-surrogate resend
+    assert not np.asarray(state.pending).any()
+
+
+def test_no_repair_desync_is_permanent_and_free():
+    """repair=False: the same lost message desyncs the replica forever —
+    later deliveries carry only new innovations (zero under zero grads,
+    once the surrogate converges), and no repair bits are ever spent."""
+    m, n = 4, 6
+    topo = build_topology("complete", m)
+    scen = Scenario(name="static")
+    arrays = make_scenario_arrays(topo, scen)
+    rng = np.random.default_rng(0)
+    stacked = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    comp = identity()
+    state = flt.rep_choco_init(jax.random.PRNGKey(0), stacked, arrays)
+    fr_clean = _clean_fault_realization(arrays, scen)
+    drop = np.zeros(np.asarray(arrays.nbrs).shape, bool)
+    drop[0, 0] = True
+    fr_lost = fr_clean._replace(
+        recv_ok=jnp.asarray(np.asarray(fr_clean.recv_ok) & ~drop)
+    )
+    innov = float(message_bits(n, n, 64))
+    state, m1 = flt.rep_choco_step(
+        state, None, _zero_grad_fn, 0.1, comp, 0.5, fr_lost, arrays,
+        innov, False,
+    )
+    d1 = float(m1["surrogate_desync"])
+    assert d1 > 0.0
+    for _ in range(3):
+        state, mk = flt.rep_choco_step(
+            state, None, _zero_grad_fn, 0.1, comp, 0.5, fr_clean, arrays,
+            innov, False,
+        )
+        assert float(mk["surrogate_desync"]) > 0.0
+        assert float(mk["repair_bits"]) == 0.0
+    assert not np.asarray(state.pending).any()  # repair=False never tracks
+
+
+def test_batched_fault_lane_matches_unbatched():
+    """Each lane of a fault-injected batched run is the corresponding
+    unbatched trajectory: per-seed fault keys fold exactly like the
+    scenario keys, and the replica state vmaps through the lane axis.
+    (Float tolerance, not bitwise: vmapped and unbatched lowerings fuse
+    FMAs differently — the repo-wide caveat.)"""
+    m, n = 6, 8
+    fm = flt.FaultModel(loss=0.2, crash=0.05, rejoin=0.5, seed=3)
+    topo = build_topology("erdos_renyi", m, p=0.6, seed=0)
+    batch, grad_fn = _linreg(m, n)
+    ba = ALG.get_algorithm("choco").bind_batched(
+        grad_fn, topo, [HPS["choco"]], seeds=[0, 1], faults=fm
+    )
+    assert ba.faulty and ba.lanes == 2
+    state = ba.init(jnp.zeros(n), m, batch)
+    aux = ba.aux_init(state)
+    hists = []
+    for k in range(4):
+        state, metrics, aux = ba.step(state, batch, k, aux)
+        hists.append(metrics)
+    for lane in range(ba.lanes):
+        hp_vals = {f: v[lane] for f, v in ba._lane_hp.items()}
+        ex = jax.tree_util.tree_map(lambda x: x[lane], ba._lane_extras)
+        bound = ba._lane_bound(
+            hp_vals, ex, ba._scen_keys[lane], ba._fault_keys[lane]
+        )
+        st = bound.init(ba._lane_keys[lane], jnp.zeros((m, n)), batch)
+        ax = bound.aux_init(st)
+        for k in range(4):
+            st, mk, ax = bound.step(st, batch, k, ax)
+            np.testing.assert_allclose(
+                float(mk["surrogate_desync"]),
+                float(hists[k]["surrogate_desync"][lane]),
+                rtol=1e-5, atol=1e-7,
+            )
+        np.testing.assert_allclose(
+            np.asarray(bound.params_of(st)),
+            np.asarray(ba.params_of(state))[lane],
+            rtol=1e-4, atol=1e-6,
+        )

@@ -139,6 +139,59 @@ def test_session_stationary_occupancy():
     assert abs(stay_down - (1.0 - scen.rejoin)) < 0.03, stay_down
 
 
+def test_straggler_session_stationary_occupancy():
+    """Markov straggler sessions: stationary late-fraction and geometric
+    session persistence (P[late -> late] = 1 - straggle_off) — the
+    burstiness the i.i.d. straggler draw cannot produce."""
+    scen = TemporalScenario(
+        name="ss", straggle_on=0.1, straggle_off=0.25, staleness=2, seed=9
+    )
+    assert abs(scen.stationary_late - 0.1 / 0.35) < 1e-12
+    topo = build_topology("ring", 32)
+    arrays = make_scenario_arrays(topo, scen)
+    ts = temporal_state_init(scen, arrays)
+
+    def body(t, k):
+        t2, _, _, _ = advance(scen, arrays, t, k)
+        return t2, t2.late
+
+    _, late = jax.jit(
+        lambda t0: jax.lax.scan(body, t0, jnp.arange(2000))
+    )(ts)
+    late = np.asarray(late)
+    occ = late.mean()
+    assert abs(occ - scen.stationary_late) < 0.02, (occ, scen.stationary_late)
+    stay = (late[:-1] & late[1:]).sum() / max(late[:-1].sum(), 1)
+    assert abs(stay - (1.0 - scen.straggle_off)) < 0.03, stay
+    assert stay > scen.stationary_late + 0.2  # genuinely bursty
+
+
+def test_straggler_sessions_degenerate_to_iid_bitwise():
+    """straggle_off = 1 - straggle_on forgets the session state: every
+    realization equals the i.i.d. straggler Scenario draw bitwise (same
+    uniform region), pinning the two paths to one PRNG layout."""
+    s, seed = 0.4, 11
+    topo = build_topology("erdos_renyi", 12, p=0.5, seed=2)
+    iid = Scenario(name="i", straggler=s, seed=seed)
+    tmp = TemporalScenario(
+        name="t", straggle_on=s, straggle_off=1.0 - s, staleness=0, seed=seed
+    )
+    arrays = make_scenario_arrays(topo, iid)
+    ts = temporal_state_init(tmp, arrays)
+    saw_straggle = 0
+    for k in range(6):
+        r_iid = realize(iid, arrays, k)
+        ts, r_tmp, delayed, tau = advance(tmp, arrays, ts, k)
+        assert not bool(delayed.any()) and not bool(tau.any())
+        for field in ("edge_alive", "alive", "participating", "weights"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_tmp, field)),
+                np.asarray(getattr(r_iid, field)), err_msg=f"{field}@{k}",
+            )
+        saw_straggle += int((~np.asarray(r_tmp.participating)).sum())
+    assert saw_straggle > 0
+
+
 def test_degenerate_markov_matches_iid_bitwise():
     """With burst_up = 1 − burst_down and rejoin = 1 − leave the chains
     forget their state: every temporal mask equals the i.i.d. `Scenario`
