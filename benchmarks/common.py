@@ -78,19 +78,24 @@ def chunk_for(steps: int) -> int:
 def benchmark(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> dict:
     """Wall-clock a callable with explicit warmup/measure phases.
 
-    ``warmup`` calls run first (the first one pays tracing + compilation;
-    its wall time is reported as ``warmup_s`` so compile cost stays
-    visible), then ``iters`` timed repetitions, each synchronized with
-    ``jax.block_until_ready``.  Returns microseconds per call as
-    ``us_min`` (the steady-state figure — least scheduler noise),
-    ``us_median`` and ``us_mean``, plus the raw phases.  Replaces the old
-    one-number ``timed`` helper so benchmark artifacts can report compile
-    time and steady state separately.
+    ``warmup`` calls run first — the first one pays tracing + compilation
+    and is timed on its own (``first_call_s``) — then ``iters`` timed
+    repetitions, each synchronized with ``jax.block_until_ready``.
+    Returns microseconds per call as ``us_min`` (the steady-state figure
+    — least scheduler noise), ``us_median`` and ``us_mean``, plus the raw
+    phases: ``warmup_s`` (whole warmup phase), ``first_call_s``, and
+    ``compile_s`` = first call minus one steady-state call — the
+    trace+compile (or persistent-cache read) cost in isolation, the
+    column the compilation-cache races compare.
     """
     t0 = time.perf_counter()
     out = None
-    for _ in range(max(warmup, 0)):
+    first_call_s = 0.0
+    for i in range(max(warmup, 0)):
         out = fn(*args)
+        if i == 0:
+            jax.block_until_ready(out)
+            first_call_s = time.perf_counter() - t0
     if out is not None:
         jax.block_until_ready(out)
     warmup_s = time.perf_counter() - t0
@@ -106,6 +111,8 @@ def benchmark(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> dict:
         "us_median": float(np.median(times_us)),
         "us_mean": float(times_us.mean()),
         "warmup_s": warmup_s,
+        "first_call_s": first_call_s,
+        "compile_s": max(first_call_s - float(np.median(times_us)) / 1e6, 0.0),
         "iters": int(len(times_us)),
     }
 

@@ -11,8 +11,8 @@ O(m·deg·n), plus the variants the baselines need (lazy B−I for BEER,
 
 All padded-form gossip — static mixers, per-step scenario mixers, the
 temporal/stale path, and PaME's partial exchange (`repro.core.pme`) —
-routes through ONE neighbor-contraction core, `gather_terms`, with two
-interchangeable implementations:
+routes through ONE neighbor-contraction core, `gather_terms`, with
+three interchangeable implementations:
 
   * impl="slots"  — one gather + multiply-add per neighbor slot,
     accumulated sequentially in ascending slot order (unrolled under
@@ -27,11 +27,18 @@ interchangeable implementations:
     ops regardless of the degree — the form that scales on TPU/GPU where
     scatter-add is parallel.  Results agree with "slots" to fp tolerance
     only (different reduction order).
+  * impl="pallas" — the fused kernel (`repro.kernels.gossip`): per
+    receiver-row block the padded table is scattered into a dense
+    on-chip matrix and contracted with one MXU matmul per term
+    (gather→contract→scatter in one kernel, shared-weight terms share
+    one scatter build).  Runs under the Pallas interpreter on CPU.
+    Agrees with "slots" to fp tolerance (matmul reduction order).
 
 The default is backend-gated (`default_impl`): "slots" on CPU — where
 XLA serializes scatter and the fused chain wins at every degree — and
-"segsum" elsewhere; override per call, per `Mixer`, or process-wide with
-the `REPRO_GOSSIP_IMPL` environment variable.
+"segsum" elsewhere ("pallas" is opt-in until validated per backend);
+override per call, per `Mixer`, or process-wide with the
+`REPRO_GOSSIP_IMPL` environment variable.
 
 Three `Mixer` modes:
 
@@ -60,6 +67,7 @@ import jax.numpy as jnp
 __all__ = [
     "PaddedMixing", "Mixer", "mix_padded", "make_mixer", "as_mixer",
     "ring_gather", "gather_terms", "default_impl", "mix_replicated",
+    "IMPLS",
 ]
 
 # Above this many slots the per-slot python unroll is replaced by a
@@ -70,22 +78,35 @@ __all__ = [
 # stay under it; tolerance-level equivalence holds regardless.
 _UNROLL_MAX_SLOTS = 128
 
+# The closed set of gossip contraction implementations.  Every entry
+# point that accepts an impl — the env var, `gather_terms(impl=...)`,
+# `make_mixer(impl=...)` — validates against this one tuple so a typo
+# fails identically loudly everywhere instead of silently falling
+# through to a default.
+IMPLS = ("slots", "segsum", "pallas")
+
+
+def _check_impl(impl: str, source: str = "impl") -> str:
+    if impl not in IMPLS:
+        raise ValueError(
+            f"{source}={impl!r}; expected one of {', '.join(map(repr, IMPLS))}"
+        )
+    return impl
+
 
 def default_impl() -> str:
     """Resolve the gossip contraction implementation for this process.
 
-    `REPRO_GOSSIP_IMPL` (= "slots" | "segsum") wins; otherwise "slots" on
-    CPU (XLA serializes scatter there — measured 10–60× slower than the
-    fused chain at every degree) and "segsum" on accelerators (O(1)
-    traced ops, parallel scatter-add).
+    `REPRO_GOSSIP_IMPL` (= "slots" | "segsum" | "pallas") wins; otherwise
+    "slots" on CPU (XLA serializes scatter there — measured 10–60× slower
+    than the fused chain at every degree) and "segsum" on accelerators
+    (O(1) traced ops, parallel scatter-add).  "pallas" — the fused kernel
+    — is never the default: it is opt-in per backend until the
+    `bench_gossip` roofline race validates it there.
     """
     env = os.environ.get("REPRO_GOSSIP_IMPL")
     if env:
-        if env not in ("slots", "segsum"):
-            raise ValueError(
-                f"REPRO_GOSSIP_IMPL={env!r}; expected 'slots' or 'segsum'"
-            )
-        return env
+        return _check_impl(env, "REPRO_GOSSIP_IMPL")
     return "slots" if jax.default_backend() == "cpu" else "segsum"
 
 
@@ -212,15 +233,18 @@ def gather_terms(
     impl="slots" is the sequential fused chain (CPU default, bit-stable
     slot order); impl="segsum" flattens to an [m·k] edge list and
     aggregates with `jax.ops.segment_sum` per term — O(1) traced ops at
-    any degree, padding routed to a dead segment (accelerator default).
-    See `default_impl`.
+    any degree, padding routed to a dead segment (accelerator default);
+    impl="pallas" is the fused gather→contract→scatter kernel
+    (`repro.kernels.gossip`, interpret mode on CPU).  See `default_impl`.
     """
-    impl = default_impl() if impl is None else impl
+    impl = default_impl() if impl is None else _check_impl(impl)
     if impl == "slots":
         return _gather_terms_slots(nbrs, terms)
     if impl == "segsum":
         return _gather_terms_segsum(nbrs, terms, pad)
-    raise ValueError(f"unknown gossip impl {impl!r}")
+    from repro.kernels.gossip.ops import gather_terms_pallas
+
+    return gather_terms_pallas(nbrs, terms, pad=pad)
 
 
 def mix_padded(pm: PaddedMixing, tree: object, impl: Optional[str] = None) -> object:
@@ -383,9 +407,11 @@ def make_mixer(topo, mode: str = "sparse", impl: Optional[str] = None) -> Mixer:
     mode="sparse" gathers over N_i ∪ {i} (O(m·deg·n)); mode="dense" runs
     the same gather over full connectivity (bit-identical to "sparse"
     under impl="slots"); mode="matrix" is the legacy dense einsum.
-    `impl` picks the neighbor contraction ("slots" | "segsum"; None =
-    `default_impl`).
+    `impl` picks the neighbor contraction ("slots" | "segsum" |
+    "pallas"; None = `default_impl`).
     """
+    if impl is not None:
+        _check_impl(impl)
     b = jnp.asarray(topo.mixing)
     if mode == "matrix":
         return Mixer("matrix", b)

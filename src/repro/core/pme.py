@@ -209,18 +209,25 @@ def pme_average_pytree(
             n = flat.shape[1]
             s = max(1, int(round(p * n)))
             masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
-            if (
-                flat.size >= _KERNEL_MIN_ELEMS
-                and jax.default_backend() != "cpu"
-                and self_params is None
+            from repro.core.mixing import default_impl
+
+            if self_params is None and (
+                default_impl() == "pallas"
+                or (
+                    flat.size >= _KERNEL_MIN_ELEMS
+                    and jax.default_backend() != "cpu"
+                )
             ):
                 # hot path: fused Pallas kernel (1 HBM read + 1 write of the
-                # [m, n] operand).  Tiny leaves stay on the einsum path —
-                # kernel launch overhead dominates — and CPU always does:
-                # there the kernel only exists in (much slower) interpret
-                # mode, kept for correctness tests, not for this route.
-                # (The kernel computes the fallback from `w` internally, so
-                # a self-view override routes through the einsum instead.)
+                # [m, n] operand).  By size/backend gate, tiny leaves stay on
+                # the einsum path — kernel launch overhead dominates — and so
+                # does CPU, where the kernel only exists in (much slower)
+                # interpret mode.  REPRO_GOSSIP_IMPL="pallas" overrides both
+                # gates so the whole dense-exchange path runs through the
+                # kernel (interpret on CPU) alongside the fused gossip
+                # contraction.  (The kernel computes the fallback from `w`
+                # internally, so a self-view override routes through the
+                # einsum instead.)
                 from repro.kernels.pme_average.ops import (
                     pme_average as pme_average_fused,
                 )

@@ -1,0 +1,8 @@
+"""Fused Pallas gossip kernel: gather→weighted-contract→scatter of the
+padded neighbor table in one kernel, registered as impl="pallas" in
+`repro.core.mixing.gather_terms`."""
+from repro.kernels.gossip.kernel import gossip_gather_pallas
+from repro.kernels.gossip.ops import gather_terms_pallas
+from repro.kernels.gossip.ref import gather_terms_ref
+
+__all__ = ["gossip_gather_pallas", "gather_terms_pallas", "gather_terms_ref"]

@@ -1,0 +1,149 @@
+"""Fused gossip neighbor contraction — Pallas TPU kernel.
+
+Executes the padded-table neighbor contraction shared by every gossip
+path in the repo (`repro.core.mixing.gather_terms`) in ONE kernel:
+
+    out_t[i, l] = sum_slot w_t[i, slot] · x_t[nbrs[i, slot], l]
+
+for T terms riding the same [m, k] neighbor table.  Per (receiver,
+coordinate) tile of shape [BM, BN] the kernel
+
+  1. scatters each distinct weight table into a dense receiver-row
+     slice on-chip:  S[i, j] = Σ_{slot: nbrs[i,slot]=j} w[i, slot]
+     (k one-hot compare + multiply-add passes on the VPU — the
+     "scatter" of gather→contract→scatter, materialized only in VMEM),
+  2. contracts it against the resident sender tile with one MXU matmul
+     per term:  out[i, :] = S[i, :] @ x[:, tile].
+
+The grid covers the receiver node axis (tiles of BM, like the
+`pme_average` kernel) and the coordinate axis (tiles of BN): W/nbrs
+stream along the receiver axis, x tiles stream along the coordinate
+axis with the full sender axis resident for the contraction.  Terms
+that share a weight table (PME's payload + coordinate-count walk) share
+one S build — the neighbor table is traversed once however many
+aggregates ride it.
+
+Compared with the "slots" chain (k serialized gather+fma passes over
+the [m, n] operand) and the "segsum" edge list (two gathers plus a
+scatter-add of an [m·k, n] intermediate through HBM), the fused form
+reads x once and writes out once per tile — O((k·m·BM + m·n) · T) VMEM
+traffic, 1 HBM read + 1 HBM write of the [m, n] operands — and keeps
+the contraction on the MXU.
+
+Dead-slot masking happens in the wrapper (`repro.kernels.gossip.ops`):
+structural padding slots get weight exactly 0.0 before entering the
+kernel, so poisoned padding weights can never leak into a receiver row.
+Lane batching (`bind_batched`) rides `jax.vmap`'s pallas batching rule,
+which prepends a lane grid dimension to the same program.
+
+Interpret mode (`interpret=True`, the CPU default via the ops wrapper)
+runs the identical program through the Pallas interpreter so the kernel
+is exercised bitwise-deterministically in tier-1 CPU tests; there the
+one-hot build + matmul lower to plain XLA ops, which also makes it the
+fastest CPU form at high degree (the slot chain is O(k) serialized
+passes, this is one gemm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_M = 128
+
+# Sender axis padded to a multiple of this for the MXU contraction.
+_SENDER_ALIGN = 8
+
+
+def _kernel(*refs, k: int, term_groups: Tuple[int, ...], n_groups: int):
+    """refs = nbrs, w_0..w_{G-1}, x_0..x_{T-1}, out_0..out_{T-1}."""
+    n_terms = len(term_groups)
+    nbrs_ref = refs[0]
+    w_refs = refs[1:1 + n_groups]
+    x_refs = refs[1 + n_groups:1 + n_groups + n_terms]
+    out_refs = refs[1 + n_groups + n_terms:]
+
+    nbrs = nbrs_ref[...]                       # [BM, k] sender ids
+    bm = nbrs.shape[0]
+    m = x_refs[0].shape[0]                     # full (padded) sender axis
+    # receiver-major one-hot scatter: S[i, j] = sum of this row's slot
+    # weights landing on sender j.  f32 compute throughout — counts and
+    # Metropolis weights are exact, and the MXU converts fuse.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, m), 1)
+    smats = []
+    for g in range(n_groups):
+        w = w_refs[g][...].astype(jnp.float32)  # [BM, k]
+        s = jnp.zeros((bm, m), jnp.float32)
+        for slot in range(k):
+            hit = (nbrs[:, slot][:, None] == iota).astype(jnp.float32)
+            s = s + w[:, slot][:, None] * hit
+        smats.append(s)
+    for t, g in enumerate(term_groups):
+        x = x_refs[t][...].astype(jnp.float32)  # [m, BN]
+        out = jnp.dot(smats[g], x, preferred_element_type=jnp.float32)
+        out_refs[t][...] = out.astype(out_refs[t].dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("term_groups", "block_n", "block_m", "interpret"),
+)
+def gossip_gather_pallas(
+    nbrs: jax.Array,            # [m, k] int32 padded neighbor table
+    ws: Sequence[jax.Array],    # G distinct weight tables, each [m, k]
+    xs: Sequence[jax.Array],    # T sender stacks, each [m, n]
+    term_groups: Tuple[int, ...],  # term t contracts ws[term_groups[t]]
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """One fused gather→contract→scatter over the padded neighbor table.
+
+    Returns one [m, n] aggregate per term.  All xs must share [m, n]
+    (the ops wrapper groups calls by trailing size); weight tables are
+    deduplicated by the caller so shared-weight terms build S once.
+    """
+    m, k = nbrs.shape
+    n = xs[0].shape[1]
+    bn = min(block_n, n)
+    bm = min(block_m, m)
+    pad_n = (-n) % bn
+    pad_m = (-m) % bm                       # receiver-axis padding
+    pad_s = (-m) % _SENDER_ALIGN            # sender-axis (MXU) padding
+    nbrs = nbrs.astype(jnp.int32)
+    ws = [w.astype(jnp.float32) for w in ws]
+    if pad_m:
+        # padded receiver rows: slot ids 0 with weight exactly 0.0 — the
+        # rows compute harmless zeros and are sliced away below.
+        nbrs = jnp.pad(nbrs, ((0, pad_m), (0, 0)))
+        ws = [jnp.pad(w, ((0, pad_m), (0, 0))) for w in ws]
+    if pad_s or pad_n:
+        # padded sender rows are never referenced (nbrs < m keeps their
+        # one-hot columns all-zero); padded coordinates are sliced away.
+        xs = [jnp.pad(x, ((0, pad_s), (0, pad_n))) for x in xs]
+    grid = ((m + pad_m) // bm, (n + pad_n) // bn)
+    row_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel, k=k, term_groups=term_groups, n_groups=len(ws)
+        ),
+        grid=grid,
+        in_specs=(
+            [row_spec]                                              # nbrs
+            + [row_spec] * len(ws)                                  # weights
+            + [pl.BlockSpec((m + pad_s, bn), lambda i, j: (0, j))]  # senders
+            * len(xs)
+        ),
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)) for _ in xs
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m + pad_m, n + pad_n), x.dtype) for x in xs
+        ],
+        interpret=interpret,
+    )(nbrs, *ws, *xs)
+    return tuple(out[:m, :n] for out in outs)

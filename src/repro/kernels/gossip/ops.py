@@ -1,0 +1,87 @@
+"""`gather_terms`-shaped entry point for the fused gossip kernel.
+
+Adapts the exact `repro.core.mixing.gather_terms` contract — a padded
+[m, k] neighbor table plus ([m, k] weight, [m, ...] operand) terms — to
+`kernel.gossip_gather_pallas`:
+
+  * dead-slot masking: structural padding slots (`pad`) get weight
+    exactly 0.0 before the kernel runs, so poisoned padding weights
+    (NaN/garbage) can never leak into a receiver row — same contract the
+    segsum impl honors by routing padding to a dead segment;
+  * weight-table deduplication: terms passing the *same* weight array
+    (PME's payload + coordinate-count walk share one selection table)
+    are detected by object identity and share one in-kernel scatter
+    build;
+  * leaf reshaping: [m, ...] operands are flattened to [m, n] and terms
+    are bucketed by trailing size — one `pallas_call` per distinct n
+    (every current caller uses a single bucket);
+  * interpret mode defaults on for CPU so the same program runs under
+    the Pallas interpreter in tier-1 tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip.kernel import gossip_gather_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gather_terms_pallas(
+    nbrs: jax.Array,                                  # [m, k] padded table
+    terms: Sequence[Tuple[jax.Array, jax.Array]],     # ([m, k] w, [m, ...] x)
+    *,
+    pad: Optional[jax.Array] = None,                  # [m, k] padding slots
+    block_n: Optional[int] = None,
+    block_m: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, ...]:
+    """Fused-kernel impl of `gather_terms`: out_t[i] = Σ_slot
+    w_t[i, slot] · x_t[nbrs[i, slot]], matching slots/segsum to fp
+    tolerance (the MXU contraction reduces in a different order)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if block_m is not None:
+        kw["block_m"] = block_m
+    terms = [(w, jnp.asarray(x)) for w, x in terms]
+    m = nbrs.shape[0]
+
+    # Mask padding weights once per distinct table (object identity —
+    # tracers of one array are one object under jit).
+    masked: dict = {}
+
+    def mask_w(w: jax.Array) -> jax.Array:
+        if id(w) not in masked:
+            wf = jnp.asarray(w).astype(jnp.float32)
+            masked[id(w)] = jnp.where(pad, 0.0, wf) if pad is not None else wf
+        return masked[id(w)]
+
+    # Bucket terms by flattened trailing size; dedupe weights per bucket.
+    buckets: dict = {}  # n_flat -> (ws, w_index_by_id, entries)
+    for t, (w, x) in enumerate(terms):
+        n_flat = math.prod(x.shape[1:]) if x.ndim > 1 else 1
+        ws, by_id, entries = buckets.setdefault(n_flat, ([], {}, []))
+        if id(w) not in by_id:
+            by_id[id(w)] = len(ws)
+            ws.append(mask_w(w))
+        entries.append((t, by_id[id(w)], x))
+
+    outs: list = [None] * len(terms)
+    for n_flat, (ws, _, entries) in buckets.items():
+        xs = [x.reshape(m, n_flat) for _, _, x in entries]
+        groups = tuple(g for _, g, _ in entries)
+        res = gossip_gather_pallas(
+            nbrs, tuple(ws), tuple(xs), groups, interpret=interpret, **kw
+        )
+        for (t, _, x), out in zip(entries, res):
+            outs[t] = out.reshape(x.shape)
+    return tuple(outs)

@@ -1,0 +1,34 @@
+"""Dense scatter-matrix reference for the fused gossip kernel.
+
+Materializes exactly what the kernel builds on-chip — the dense
+receiver-by-sender matrix S[i, j] = Σ_{slot: nbrs[i,slot]=j} w[i, slot]
+— then contracts it with one matmul per term.  O(m²) memory, so it is a
+test oracle, not a production path; it shares the kernel's reduction
+order (matmul over senders), making it the tight-tolerance comparison
+point for the Pallas output in the conformance suite.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_terms_ref(
+    nbrs: jax.Array,                                  # [m, k] padded table
+    terms: Sequence[Tuple[jax.Array, jax.Array]],     # ([m, k] w, [m, ...] x)
+    *,
+    pad: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, ...]:
+    m, _ = nbrs.shape
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    outs = []
+    for w, x in terms:
+        wf = jnp.asarray(w).astype(jnp.float32)
+        if pad is not None:
+            wf = jnp.where(pad, 0.0, wf)
+        s = jnp.zeros((m, m), jnp.float32).at[rows, nbrs].add(wf)
+        x2 = jnp.asarray(x).reshape(m, -1).astype(jnp.float32)
+        outs.append(jnp.dot(s, x2).reshape(x.shape).astype(x.dtype))
+    return tuple(outs)

@@ -297,7 +297,15 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=None,
                     help="log cadence in steps (chunk-aligned; default=chunk)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(default: $REPRO_COMPILE_CACHE; unset = off). "
+                         "Warm runs skip compilation for identical programs.")
     args = ap.parse_args()
+
+    cache_dir = engine.setup_compilation_cache(args.compile_cache)
+    if cache_dir:
+        print(f"[train] compilation cache at {cache_dir}", flush=True)
 
     cfg, bound, state, make_batch, n_params = build_everything(args)
     lanes = bound.lanes if args.seeds > 1 else None

@@ -251,3 +251,36 @@ def test_k_start_offsets_step_index_and_termination_window():
     _, metrics0, info0 = runner(state, lambda k: None, 8)
     assert info0["steps_run"] == 3
     np.testing.assert_array_equal(np.asarray(metrics0["k"]), np.arange(3))
+
+
+def test_setup_compilation_cache(tmp_path, monkeypatch):
+    """The cache helper: no-op when unset, env fallback, explicit dir wins,
+    and the configured dir actually receives cache entries on compile."""
+    import os
+
+    import jax
+
+    from repro.core.engine import setup_compilation_cache
+
+    prior = jax.config.jax_compilation_cache_dir
+    try:
+        monkeypatch.delenv("REPRO_COMPILE_CACHE", raising=False)
+        assert setup_compilation_cache() is None  # unset -> disabled
+
+        env_dir = tmp_path / "env_cache"
+        monkeypatch.setenv("REPRO_COMPILE_CACHE", str(env_dir))
+        assert setup_compilation_cache() == str(env_dir)
+
+        explicit = tmp_path / "explicit"
+        assert setup_compilation_cache(str(explicit)) == str(explicit)
+        assert jax.config.jax_compilation_cache_dir == str(explicit)
+
+        # a fresh jit closure compiled now must land an entry on disk
+        fn = jax.jit(lambda x: x * 2.0 + 1.0)
+        jax.block_until_ready(fn(jnp.arange(8.0)))
+        entries = [
+            f for f in os.listdir(explicit) if not f.endswith("-atime")
+        ]
+        assert entries, "persistent cache wrote no entries"
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prior)

@@ -1,0 +1,326 @@
+"""Conformance suite for the fused Pallas gossip kernel (impl="pallas").
+
+Pins the three-way equivalence slots == segsum == pallas(interpret) over
+random topologies and the known degenerate graphs, the multi-term /
+shared-weight semantics, lane batching under vmap, the PME padded path,
+and the loud-validation contract shared by every impl entry point.
+
+Tolerance discipline: the kernel contracts over senders with one MXU
+matmul, so its reduction order differs from the slots chain — continuous
+data is compared at tight fp tolerance (like segsum), while
+integer-valued data (sums < 2^24, exactly representable in f32) must
+match BITWISE across all three impls.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_topology
+from repro.core import mixing
+from repro.core.mixing import (
+    IMPLS, PaddedMixing, default_impl, gather_terms, make_mixer,
+)
+from repro.kernels.gossip.ops import gather_terms_pallas
+from repro.kernels.gossip.ref import gather_terms_ref
+
+ATOL = 1e-5
+
+
+def _assert_impls_agree(pm, tree, atol=ATOL, bitwise=False):
+    outs = {
+        impl: jax.tree_util.tree_leaves(
+            mixing.mix_padded(pm, tree, impl=impl)
+        )
+        for impl in IMPLS
+    }
+    for impl in ("segsum", "pallas"):
+        for a, b in zip(outs["slots"], outs[impl]):
+            if bitwise:
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b), err_msg=impl
+                )
+            else:
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=atol, err_msg=impl
+                )
+
+
+# ---------------------------------------------------------------------------
+# property-style equivalence over random topologies
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    kind=st.sampled_from(["ring", "regular", "erdos_renyi", "star"]),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 10_000),
+)
+def test_impls_agree_random_topologies(m, kind, n, seed):
+    kwargs = {}
+    if kind == "regular":
+        kwargs = dict(degree=min(4, m - 1), seed=seed)
+    elif kind == "erdos_renyi":
+        kwargs = dict(p=0.5, seed=seed)
+    elif kind == "star" and m < 3:
+        m = 3
+    topo = build_topology(kind, m, **kwargs)
+    pm = make_mixer(topo, "sparse").pm
+    rng = np.random.default_rng(seed)
+    tree = {
+        "v": jnp.asarray(rng.standard_normal((m,)), jnp.float32),
+        "w": jnp.asarray(rng.standard_normal((m, n)), jnp.float32),
+    }
+    _assert_impls_agree(pm, tree)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(3, 16), seed=st.integers(0, 1000))
+def test_impls_agree_bitwise_on_integer_data(m, seed):
+    """Metropolis weights are dyadic on regular graphs only, so use a
+    uniform-weight table (1/2^3) and small-integer data: every partial
+    sum is exactly representable, making any impl disagreement a real
+    indexing/masking bug, not reduction order."""
+    rng = np.random.default_rng(seed)
+    k = 4
+    nbrs = jnp.asarray(rng.integers(0, m, (m, k)), jnp.int32)
+    w = jnp.full((m, k), 0.125, jnp.float32)
+    x = jnp.asarray(rng.integers(-64, 64, (m, 9)).astype(np.float32))
+    pm = PaddedMixing(nbrs, w, jnp.zeros((m, k), bool), None)
+    _assert_impls_agree(pm, x, bitwise=True)
+
+
+# ---------------------------------------------------------------------------
+# degenerate graphs
+# ---------------------------------------------------------------------------
+def _poison_pad(pm):
+    """NaN-poison the padding weights: every impl must mask them out."""
+    assert pm.pad is not None and bool(pm.pad.sum() > 0)
+    return pm.with_weights(jnp.where(pm.pad, jnp.nan, pm.w))
+
+
+def test_star_hub_and_poisoned_padding():
+    m = 9
+    topo = build_topology("star", m)
+    pm = make_mixer(topo, "sparse").pm
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, 33)), jnp.float32)
+    _assert_impls_agree(pm, x)
+    # leaf rows are heavily padded against the hub row's full table —
+    # poisoned padding weights must not leak through any impl.
+    poisoned = _poison_pad(pm)
+    out = gather_terms_pallas(poisoned.nbrs, [(poisoned.w, x)], pad=poisoned.pad)[0]
+    assert np.isfinite(np.asarray(out)).all()
+    ref = mixing.mix_padded(pm, x, impl="slots")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=ATOL)
+
+
+def test_isolated_node():
+    """An all-padding row (isolated node: only the self slot carries
+    weight 1) must pass its own value through unchanged, bitwise, in
+    every impl — same fixture as the segsum degenerate test."""
+    m = 4
+    nbrs = jnp.asarray([[1, 0], [0, 1], [0, 2], [3, 3]], jnp.int32)
+    w = jnp.asarray(
+        [[0.5, 0.5], [0.5, 0.5], [1.0, 0.0], [1.0, 0.0]], jnp.float32
+    )
+    is_self = jnp.asarray(
+        [[False, True], [False, True], [False, True], [True, False]]
+    )
+    pad = jnp.asarray(
+        [[False, False], [False, False], [False, False], [False, True]]
+    )
+    pm = PaddedMixing(nbrs, w, is_self, pad)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((m, 11)), jnp.float32)
+    _assert_impls_agree(pm, x)
+    for impl in IMPLS:
+        out = mixing.mix_padded(pm, x, impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(out[3]), np.asarray(x[3]), err_msg=impl
+        )
+    # poisoned padding slot: the kernel's dead-slot masking must hold
+    out_bad = mixing.mix_padded(pm.with_weights(jnp.where(pad, jnp.nan, w)),
+                                x, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(out_bad), np.asarray(mixing.mix_padded(pm, x, impl="pallas")),
+        atol=0.0,
+    )
+
+
+def test_m2_minimal_graph():
+    topo = build_topology("complete", 2)
+    pm = make_mixer(topo, "sparse").pm
+    x = jnp.asarray([[1.0, 2.0], [3.0, 5.0]], jnp.float32)
+    _assert_impls_agree(pm, x, bitwise=False)
+
+
+def test_fully_dropped_all_weights_zero():
+    """All-zero weight table (every message dropped): exact zeros out of
+    every impl — the kernel's masked scatter must not fabricate values."""
+    m, k = 5, 3
+    nbrs = jnp.asarray(np.random.default_rng(0).integers(0, m, (m, k)), jnp.int32)
+    w = jnp.zeros((m, k), jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((m, 8)), jnp.float32)
+    for impl in IMPLS:
+        out = gather_terms(nbrs, [(w, x)], impl=impl)[0]
+        np.testing.assert_array_equal(np.asarray(out), 0.0, err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# multi-term semantics + shared-weight dedup
+# ---------------------------------------------------------------------------
+def test_multi_term_single_walk_matches_ref():
+    """Distinct weight tables per term, plus a term sharing table 0 —
+    exercising the kernel's shared-S build — against the dense scatter
+    reference and the slots chain."""
+    m, k = 12, 5
+    rng = np.random.default_rng(3)
+    nbrs = jnp.asarray(rng.integers(0, m, (m, k)), jnp.int32)
+    w0 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    x0 = jnp.asarray(rng.standard_normal((m, 20)), jnp.float32)
+    x1 = jnp.asarray(rng.standard_normal((m, 20)), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal((m, 20)), jnp.float32)
+    terms = [(w0, x0), (w1, x1), (w0, x2)]  # term 2 shares w0
+    got = gather_terms_pallas(nbrs, terms)
+    ref = gather_terms_ref(nbrs, terms)
+    chain = gather_terms(nbrs, terms, impl="slots")
+    for g, r, c in zip(got, ref, chain):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), atol=ATOL)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(c), atol=ATOL)
+
+
+def test_mixed_leaf_ranks_bucketed():
+    """[m], [m, n] and [m, a, b] leaves in one call — the ops wrapper
+    buckets by trailing size and restores shapes."""
+    m, k = 7, 3
+    rng = np.random.default_rng(5)
+    nbrs = jnp.asarray(rng.integers(0, m, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    xs = [
+        jnp.asarray(rng.standard_normal((m,)), jnp.float32),
+        jnp.asarray(rng.standard_normal((m, 6)), jnp.float32),
+        jnp.asarray(rng.standard_normal((m, 2, 3)), jnp.float32),
+    ]
+    got = gather_terms_pallas(nbrs, [(w, x) for x in xs])
+    want = gather_terms(nbrs, [(w, x) for x in xs], impl="slots")
+    for g, r, x in zip(got, want, xs):
+        assert g.shape == x.shape
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# lane batching (bind_batched rides vmap over the step)
+# ---------------------------------------------------------------------------
+def test_vmap_lane_batching_matches_per_lane():
+    m, lanes = 16, 5
+    topo = build_topology("regular", m, degree=6, seed=0)
+    mx = make_mixer(topo, "sparse", impl="pallas")
+    rng = np.random.default_rng(2)
+    xs = jnp.asarray(rng.standard_normal((lanes, m, 29)), jnp.float32)
+    batched = jax.vmap(mx.mix)(xs)
+    per_lane = jnp.stack([mx.mix(x) for x in xs])
+    np.testing.assert_allclose(
+        np.asarray(batched), np.asarray(per_lane), atol=ATOL
+    )
+    slots_ref = jnp.stack(
+        [mixing.mix_padded(mx.pm, x, impl="slots") for x in xs]
+    )
+    np.testing.assert_allclose(
+        np.asarray(batched), np.asarray(slots_ref), atol=ATOL
+    )
+
+
+def test_receiver_grid_multiple_tiles():
+    """m spanning several receiver-row blocks (block_m < m), non-divisible."""
+    m, k = 37, 4
+    rng = np.random.default_rng(9)
+    nbrs = jnp.asarray(rng.integers(0, m, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, 130)), jnp.float32)
+    got = gather_terms_pallas(nbrs, [(w, x)], block_m=16, block_n=64)[0]
+    want = gather_terms(nbrs, [(w, x)], impl="slots")[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# PME padded path + dense-exchange kernel routing under the env gate
+# ---------------------------------------------------------------------------
+def test_pme_padded_pallas_matches_slots():
+    from repro.core.pme import (
+        pme_average_pytree_padded, sample_neighbor_selection_padded,
+    )
+
+    m = 10
+    topo = build_topology("erdos_renyi", m, p=0.5, seed=4)
+    nbrs, valid = (jnp.asarray(v) for v in topo.neighbor_matrix_padded())
+    t = jnp.maximum(
+        (0.6 * valid.sum(axis=1)).astype(jnp.int32), 1
+    )
+    sel = sample_neighbor_selection_padded(
+        jax.random.PRNGKey(0), nbrs, valid, t, jnp.ones(m, bool)
+    )
+    params = {
+        "w": jnp.asarray(
+            np.random.default_rng(6).standard_normal((m, 4, 8)), jnp.float32
+        ),
+    }
+    outs = {
+        impl: pme_average_pytree_padded(
+            jax.random.PRNGKey(1), params, nbrs, sel, 0.5,
+            pad=~valid, impl=impl,
+        )
+        for impl in IMPLS
+    }
+    for impl in ("segsum", "pallas"):
+        np.testing.assert_allclose(
+            np.asarray(outs[impl]["w"]), np.asarray(outs["slots"]["w"]),
+            atol=ATOL, err_msg=impl,
+        )
+
+
+def test_env_gate_routes_dense_exchange_through_kernel(monkeypatch):
+    """REPRO_GOSSIP_IMPL=pallas must (a) win default_impl and (b) route
+    the exact-mode dense exchange through the pme_average kernel with
+    unchanged results."""
+    from repro.core.pme import pme_average_pytree
+
+    m, n = 8, 40
+    rng = np.random.default_rng(7)
+    a_sel = jnp.asarray((rng.random((m, m)) < 0.6).astype(np.float32))
+    params = {"w": jnp.asarray(rng.standard_normal((m, n)), jnp.float32)}
+    key = jax.random.PRNGKey(3)
+    monkeypatch.delenv("REPRO_GOSSIP_IMPL", raising=False)
+    base = pme_average_pytree(key, params, a_sel, 0.5, mode="exact")
+    monkeypatch.setenv("REPRO_GOSSIP_IMPL", "pallas")
+    assert default_impl() == "pallas"
+    routed = pme_average_pytree(key, params, a_sel, 0.5, mode="exact")
+    np.testing.assert_allclose(
+        np.asarray(routed["w"]), np.asarray(base["w"]), atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# loud validation everywhere (satellite: gather_terms used to fall through)
+# ---------------------------------------------------------------------------
+def test_unknown_impl_fails_loudly_everywhere(monkeypatch):
+    m = 4
+    topo = build_topology("ring", m)
+    nbrs = jnp.zeros((m, 2), jnp.int32)
+    terms = [(jnp.zeros((m, 2)), jnp.zeros((m, 3)))]
+    with pytest.raises(ValueError, match="bogus"):
+        gather_terms(nbrs, terms, impl="bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        make_mixer(topo, "sparse", impl="bogus")
+    monkeypatch.setenv("REPRO_GOSSIP_IMPL", "bogus")
+    with pytest.raises(ValueError, match="REPRO_GOSSIP_IMPL"):
+        default_impl()
+
+
+def test_env_accepts_every_registered_impl(monkeypatch):
+    for impl in IMPLS:
+        monkeypatch.setenv("REPRO_GOSSIP_IMPL", impl)
+        assert default_impl() == impl

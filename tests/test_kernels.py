@@ -148,6 +148,58 @@ def test_full_ssd_layer_kernel_path_vs_sequential():
         )
 
 
+def test_flash_attention_kernel_interpret_explicit():
+    """Explicit interpret=True smoke at the kernel layer (not through the
+    backend-gated ops wrapper), so the Pallas program itself is exercised
+    in tier-1 on CPU regardless of wrapper defaults."""
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    out = flash_attention_pallas(
+        q, k, v, block_q=32, block_k=32, interpret=True
+    )
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_ssd_scan_kernel_interpret_explicit():
+    """Explicit interpret=True smoke for the SSD intra-chunk kernel."""
+    from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
+
+    rng = np.random.default_rng(13)
+    b, nc, l, h, p, g, n = 1, 2, 16, 4, 8, 2, 8
+    xc = jnp.asarray(rng.standard_normal((b, nc, l, h, p)), jnp.float32)
+    dtc = jnp.asarray(rng.random((b, nc, l, h)) * 0.2 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.exp(rng.standard_normal(h) * 0.2), jnp.float32)
+    cum = jnp.cumsum(dtc * a[None, None, None], axis=2)
+    bc = jnp.asarray(rng.standard_normal((b, nc, l, g, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, nc, l, g, n)), jnp.float32)
+    y_k, st_k = ssd_intra_chunk_pallas(xc, dtc, cum, bc, cc, h // g,
+                                       interpret=True)
+    y_r, st_r = ssd_intra_chunk_ref(xc, dtc, cum, bc, cc, h // g)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), atol=1e-4)
+
+
+def test_gossip_kernel_interpret_explicit():
+    """Explicit interpret=True smoke for the fused gossip kernel (full
+    equivalence suite lives in tests/test_gossip_kernel.py)."""
+    from repro.kernels.gossip.ops import gather_terms_pallas
+    from repro.kernels.gossip.ref import gather_terms_ref
+
+    rng = np.random.default_rng(17)
+    m, k = 12, 4
+    nbrs = jnp.asarray(rng.integers(0, m, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, 50)), jnp.float32)
+    out = gather_terms_pallas(nbrs, [(w, x)], interpret=True)[0]
+    ref = gather_terms_ref(nbrs, [(w, x)])[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
 def test_flash_attention_through_model():
     """cfg.use_flash routes GQA through the kernel; logits must match."""
     from repro.models import ModelConfig, init_params
