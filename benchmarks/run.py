@@ -69,41 +69,6 @@ os.makedirs(ART, exist_ok=True)
 RESULTS: Dict[str, object] = {}
 
 
-def _pame_run(m, n, cfg, steps, seed=0, problem="linreg", topo_kind="erdos_renyi",
-              topo_kwargs=None, spn=128):
-    topo = build_topology(topo_kind, m, **(topo_kwargs or dict(p=0.4, seed=seed)))
-    if problem == "linreg":
-        batch, grad_fn, objective = linreg_problem(m, n, spn=spn, seed=seed)
-        acc = None
-    else:
-        batch, grad_fn, objective, acc = logreg_problem(m, n, spn=spn, seed=seed)
-    chunk = chunk_for(steps)
-    runner = make_pame_runner(
-        grad_fn, topo, cfg, objective_fn=objective, tol_std=1e-3,
-        chunk_size=chunk, seed=seed,
-    )
-    key = jax.random.PRNGKey(seed)
-    # warm-up: one chunk compiles the scan executable; the timed run below
-    # then measures steady-state algorithm throughput, not tracing.
-    runner(key, jnp.zeros(n), m, lambda k: batch, chunk)
-    t0 = time.perf_counter()
-    state, hist = runner(key, jnp.zeros(n), m, lambda k: batch, steps)
-    wall = time.perf_counter() - t0
-    mean_w = jax.tree_util.tree_map(lambda x: x.mean(axis=0), state.params)
-    out = {
-        "objective": hist["objective"],
-        "steps_run": hist["steps_run"],
-        "final": hist["objective"][-1],
-        # per-step wall over the steps actually executed on device (the
-        # engine runs to the chunk boundary past an early termination)
-        "us_per_call": wall / max(hist["steps_dispatched"], 1) * 1e6,
-        "mean_t": float(np.mean(np.maximum(1, np.floor(cfg.nu * topo.degrees)))),
-    }
-    if acc is not None:
-        out["accuracy"] = acc(mean_w)
-    return out
-
-
 SWEEP_SEEDS = 5  # >= 5 seeds behind every mean ± std table entry
 
 
@@ -237,7 +202,11 @@ def bench_comm_period(quick=False):
 
 
 def bench_connectivity(quick=False):
-    """Fig 7 heatmap: degree x transmission rate -> (final obj, iters)."""
+    """Fig 7 heatmap: degree x transmission rate -> (final obj, iters).
+
+    Each (degree, rate) cell's SWEEP_SEEDS seed replicas run as lanes of
+    ONE batched scan (`_pame_grid` -> `bind_batched`) — the seed axis left
+    the per-cell Python loop, so every table entry is a mean ± std."""
     n, m = 300, 32
     degrees = [2, 6, 14] if quick else [2, 4, 8, 14, 20]
     rates = [0.1, 0.3, 0.6]
@@ -245,14 +214,16 @@ def bench_connectivity(quick=False):
     for d in degrees:
         for p in rates:
             cfg = PaMEConfig(nu=0.4, p=p, gamma=1.01, sigma0=8.0)
-            r = _pame_run(
-                m, n, cfg, steps=300, topo_kind="regular",
+            (r,) = _pame_grid(
+                m, n, [cfg], steps=300, topo_kind="regular",
                 topo_kwargs=dict(degree=d, seed=0),
             )
             table[f"deg{d}_p{p}"] = r
             csv_row(
-                f"connectivity/degree={d}/s_over_n={p}", r["us_per_call"],
-                f"final_obj={r['final']:.4f};rounds={r['steps_run']}",
+                f"connectivity/degree={d}/s_over_n={p}",
+                r["us_per_lane_step"],
+                f"final_obj={r['final_mean']:.4f}±{r['final_std']:.4f}"
+                f";rounds={r['rounds_mean']:.0f};seeds={r['seeds']}",
             )
     RESULTS["connectivity"] = table
 
@@ -1119,7 +1090,14 @@ def bench_gossip(quick=False):
 
 def bench_heterogeneity(quick=False):
     """Fig 11 (label skew, CNN) + Fig 12 (Dirichlet, ResNet-20), synthetic
-    stand-in images (offline container; heterogeneity mechanism exact)."""
+    stand-in images (offline container; heterogeneity mechanism exact).
+
+    Every cell's SWEEP_SEEDS seed replicas run as lanes of ONE batched scan
+    (the seed axis moved from a per-cell Python loop onto `bind_batched`),
+    so accuracies and losses report mean ± std.  The headline block races
+    the flat vs tree-partitioned exchange on a >=1M-parameter wide CNN
+    under label skew and emits the table into EXPERIMENTS.md."""
+    from repro.core import algorithms as ALG
     from repro.data import (
         NodeBatcher,
         SyntheticClassification,
@@ -1131,12 +1109,22 @@ def bench_heterogeneity(quick=False):
 
     table = {}
     m = 4
-    steps = 40 if quick else 100
+    # quick trims: chunk-aligned step counts (one scan length = one
+    # compile), 3 seed lanes on the figure cells; the EXPERIMENTS.md
+    # headline always runs the full SWEEP_SEEDS lanes
+    steps = 32 if quick else 100
+    fig_seeds = list(range(3 if quick else SWEEP_SEEDS))
+    hl_seeds = list(range(SWEEP_SEEDS))
 
-    def run_fl(ds, parts, init_fn, apply_fn, steps, sigma0=10.0):
-        nb = NodeBatcher({"x": ds.images, "y": ds.labels}, parts, batch_size=32, seed=0)
+    def run_fl(ds, parts, init_fn, apply_fn, steps, sigma0=10.0, cfg=None,
+               seeds=None, batch_size=32):
+        seeds = fig_seeds if seeds is None else seeds
+        nb = NodeBatcher({"x": ds.images, "y": ds.labels}, parts,
+                         batch_size=batch_size, seed=0)
         topo = build_topology("complete", m)
-        cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=sigma0, kappa_lo=2, kappa_hi=4)
+        if cfg is None:
+            cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=sigma0,
+                             kappa_lo=2, kappa_hi=4)
 
         def grad_fn(params, batch, key):
             return jax.value_and_grad(
@@ -1147,37 +1135,53 @@ def bench_heterogeneity(quick=False):
             b = nb.next()
             return {"x": jnp.asarray(b["x"], jnp.float32), "y": jnp.asarray(b["y"], jnp.int32)}
 
+        ba = ALG.get_algorithm("pame").bind_batched(
+            grad_fn, topo, [cfg], seeds=seeds
+        )
         t0 = time.perf_counter()
-        state, hist = run_pame(
-            jax.random.PRNGKey(0), init_fn(jax.random.PRNGKey(1)), m,
-            grad_fn, batch_fn, topo, cfg, num_steps=steps, tol_std=0.0,
+        state, hist = ba.run(
+            init_fn(jax.random.PRNGKey(1)), m, batch_fn, steps, tol_std=0.0
         )
         wall = time.perf_counter() - t0
-        mean_params = jax.tree_util.tree_map(lambda x: x.mean(axis=0), state.params)
-        logits = apply_fn(mean_params, jnp.asarray(ds.images[:512], jnp.float32))
-        acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.labels[:512])))
+        # per-lane accuracy of the node-mean parameters (state leaves [L, m, ...])
+        xs = jnp.asarray(ds.images[:512], jnp.float32)
+        ys = jnp.asarray(ds.labels[:512])
+        accs = []
+        for l in range(ba.lanes):
+            mean_params = jax.tree_util.tree_map(
+                lambda x: x[l].mean(axis=0), state.params
+            )
+            logits = apply_fn(mean_params, xs)
+            accs.append(float(jnp.mean(jnp.argmax(logits, -1) == ys)))
+        am, astd = mean_std(accs)
+        lm, lstd = mean_std(lane_finals(hist, "loss"))
+        bm, _ = mean_std(hist["wire_bits_total"])
         return {
-            "loss": hist["loss"],
-            "final_loss": hist["loss"][-1],
-            "accuracy": acc,
-            "us_per_call": wall / steps * 1e6,
+            "final_loss": lm, "final_loss_std": lstd,
+            "accuracy": am, "accuracy_std": astd,
+            "gbits": bm / 1e9, "seeds": len(seeds),
+            "us_per_call": wall / max(
+                int(hist["steps_dispatched"]) * ba.lanes, 1) * 1e6,
         }
 
-    # Fig 11: label skew C in {1, 7, 10} on the CNN
+    # Fig 11: label skew C in {1, 7, 10} on the CNN (quick: the extremes —
+    # every cell pays a fresh lane-vmapped compile, so quick trims cells,
+    # not steps)
     ds = SyntheticClassification.make(1024, (28, 28, 1), 10, seed=0, sep=3.0)
-    for c in (1, 7, 10):
+    for c in ((1, 10) if quick else (1, 7, 10)):
         parts = label_skew_partition(ds.labels, m, c, seed=0)
         r = run_fl(ds, parts, lambda k: cnn_init(k), cnn_apply, steps)
         table[f"cnn_labelskew_C{c}"] = r
         csv_row(
             f"heterogeneity/cnn/C={c}", r["us_per_call"],
-            f"acc={r['accuracy']:.3f};final_loss={r['final_loss']:.3f}",
+            f"acc={r['accuracy']:.3f}±{r['accuracy_std']:.3f}"
+            f";final_loss={r['final_loss']:.3f};seeds={r['seeds']}",
         )
 
     # Fig 12: Dirichlet beta in {0.3, 0.6} + iid on ResNet-20 (short run)
     ds2 = SyntheticClassification.make(512, (32, 32, 3), 10, seed=1, sep=2.0)
     rn_steps = 10 if quick else 40
-    for beta in (0.3, 0.6, None):
+    for beta in ((0.3,) if quick else (0.3, 0.6, None)):
         if beta is None:
             parts = iid_partition(ds2.labels, m, seed=0)
             tag = "iid"
@@ -1190,8 +1194,70 @@ def bench_heterogeneity(quick=False):
         table[f"resnet20_{tag}"] = r
         csv_row(
             f"heterogeneity/resnet20/{tag}", r["us_per_call"],
-            f"acc={r['accuracy']:.3f};final_loss={r['final_loss']:.3f}",
+            f"acc={r['accuracy']:.3f}±{r['accuracy_std']:.3f}"
+            f";final_loss={r['final_loss']:.3f};seeds={r['seeds']}",
         )
+
+    # Headline: flat vs tree-partitioned exchange on a >=1M-parameter wide
+    # CNN (cnn_init width=2) under label skew.  The tree partition prices
+    # each leaf as its own Eq.-(8) segment, and p_leaf throttles the
+    # dominant fc1 matrix (~95% of the parameters) while the small conv /
+    # head leaves keep exchanging densely.
+    width = 2
+    params0 = cnn_init(jax.random.PRNGKey(1), width=width)
+    sizes = [int(np.prod(x.shape))
+             for x in jax.tree_util.tree_leaves(params0)]
+    n_wide = sum(sizes)
+    hl_steps = 16 if quick else 60
+    hl_bs = 16 if quick else 32
+    hl_C = 3
+    parts = label_skew_partition(ds.labels, m, hl_C, seed=0)
+    base = dict(nu=0.7, gamma=1.002, sigma0=10.0, kappa_lo=2, kappa_hi=4,
+                mask_mode="bernoulli")
+    # leaf order (tree_flatten, sorted keys): b1 b2 c1 c2 fc1 fc2
+    hl_cfgs = [
+        ("flat p=0.3", PaMEConfig(p=0.3, **base)),
+        ("tree p=0.3", PaMEConfig(p=0.3, partition="tree", **base)),
+        ("tree p_leaf (fc1@0.15)", PaMEConfig(
+            p=0.3, partition="tree",
+            p_leaf=(1.0, 1.0, 0.8, 0.4, 0.15, 0.8), **base)),
+    ]
+    md_rows = []
+    for label, cfg in hl_cfgs:
+        r = run_fl(ds, parts, lambda k: cnn_init(k, width=width), cnn_apply,
+                   hl_steps, cfg=cfg, seeds=hl_seeds, batch_size=hl_bs)
+        table[f"wide_cnn_{label}"] = r
+        csv_row(
+            f"heterogeneity/wide_cnn/{label}", r["us_per_call"],
+            f"acc={r['accuracy']:.3f}±{r['accuracy_std']:.3f}"
+            f";final_loss={r['final_loss']:.3f};gbits={r['gbits']:.3f}"
+            f";seeds={r['seeds']}",
+        )
+        md_rows.append((
+            label,
+            f"{r['accuracy']:.3f} ± {r['accuracy_std']:.3f}",
+            f"{r['final_loss']:.3f} ± {r['final_loss_std']:.3f}",
+            f"{r['gbits']:.3f}",
+            f"{r['us_per_call']:.0f}",
+        ))
+    _update_experiments_md(
+        "heterogeneity-real",
+        "## Partitioned partial exchange on a real model workload\n\n"
+        f"Wide CNN ({n_wide/1e6:.2f}M params, `cnn_init(width=2)`), "
+        f"label-skew heterogeneity (C={hl_C} classes/node), m={m} nodes "
+        f"(complete graph), {hl_steps} steps, per-node batch {hl_bs}; each "
+        f"row's {len(hl_seeds)} seed replicas run as lanes of ONE batched scan "
+        "(`bind_batched`).  `tree` partitions the exchange over the model "
+        "pytree: per-leaf coordinate masks and per-leaf Eq.-(8) wire "
+        "accounting; `p_leaf` throttles the dominant fc1 leaf "
+        f"({sizes[4]/n_wide:.0%} of all parameters) to 0.15 while small "
+        "conv/head leaves exchange at 0.4–1.0.\n\n"
+        + _fmt_md_table(
+            ("exchange", "accuracy", "final loss", "gbits on the wire",
+             "us/lane-step"),
+            md_rows,
+        ),
+    )
     RESULTS["heterogeneity"] = table
 
 

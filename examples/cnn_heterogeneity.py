@@ -15,12 +15,15 @@ from repro.data import NodeBatcher, SyntheticClassification, label_skew_partitio
 from repro.models.cnn import ce_loss, cnn_apply, cnn_init
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--classes", type=int, default=7, help="C classes per node")
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--steps", type=int, default=80)
-    args = ap.parse_args()
+    ap.add_argument("--partition", default="flat", choices=["flat", "tree"],
+                    help="PaME message format: flat vector vs per-leaf "
+                         "segments with per-leaf Eq.-(8) accounting")
+    args = ap.parse_args(argv)
 
     m = args.nodes
     ds = SyntheticClassification.make(1024, (28, 28, 1), 10, seed=0, sep=3.0)
@@ -49,7 +52,8 @@ def main() -> None:
         return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.labels[:512])))
 
     # --- PaME ---
-    cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=10.0, kappa_lo=2, kappa_hi=4)
+    cfg = PaMEConfig(nu=0.7, p=0.3, gamma=1.002, sigma0=10.0, kappa_lo=2,
+                     kappa_hi=4, partition=args.partition)
     state, hist = run_pame(
         jax.random.PRNGKey(0), cnn_init(jax.random.PRNGKey(1)), m,
         grad_fn, batch_fn, topo, cfg, num_steps=args.steps, tol_std=0.0,

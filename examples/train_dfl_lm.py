@@ -12,9 +12,6 @@ This wraps repro.launch.train and additionally reports per-round
 communication volume (Eq. 8) for the chosen transmission rate.
 """
 import argparse
-import sys
-
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.pme import message_bits
@@ -30,6 +27,9 @@ def main() -> None:
     ap.add_argument("--p", type=float, default=0.2, help="transmission rate s/n")
     ap.add_argument("--algo", default="pame",
                     help="any registered algorithm (see repro.core.algorithms)")
+    ap.add_argument("--partition", default="flat", choices=["flat", "tree"],
+                    help="PaME message format: flat vector vs per-leaf "
+                         "segments (see repro.launch.train --partition)")
     ap.add_argument("--layers", type=int, default=None, help="override depth")
     ap.add_argument("--d-model", type=int, default=None)
     args = ap.parse_args()
@@ -54,8 +54,11 @@ def main() -> None:
         "--seq", str(args.seq), "--nodes", str(args.nodes),
         "--p", str(args.p), "--sigma0", "50", "--log-every", "10",
     ]
-    sys.argv = ["train"] + argv
-    train_mod.main()
+    if args.algo == "pame":
+        argv += ["--partition", args.partition]
+    # pass the argv list straight through — clobbering sys.argv would leak
+    # into any importing caller (and pytest collection)
+    train_mod.main(argv)
 
 
 if __name__ == "__main__":

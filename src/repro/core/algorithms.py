@@ -53,7 +53,8 @@ from repro.core import scenarios as scen_mod
 from repro.core import temporal as temp_mod
 from repro.core.compression import qsgd, rand_k
 from repro.core.mixing import Mixer, make_mixer, ring_gather
-from repro.core.pme import message_bits
+from repro.core.pme import leaf_rates as pme_leaf_rates
+from repro.core.pme import message_bits, tree_message_bits
 from repro.core.topology import Topology
 
 AnyScenario = Union[scen_mod.Scenario, temp_mod.TemporalScenario]
@@ -134,6 +135,12 @@ class Algorithm:
     wire_bits: Callable
     params_of: Callable = staticmethod(lambda s: s.params)
     needs_batch0: bool = False
+    # optional (topo, hps, sizes) -> float: per-leaf Eq.-(8) accounting for
+    # algorithms whose wire format partitions over the model pytree;
+    # ``sizes`` is the per-leaf coordinate count of the (unstacked) model
+    # in tree_flatten order.  None falls back to wire_bits(topo, hps,
+    # sum(sizes)) wherever the leaf structure is known.
+    wire_bits_sizes: Optional[Callable] = None
     # optional (topo, hps, mixing, seed) -> dict merged into ctx.extras
     setup: Optional[Callable] = None
     # optional (hps, n) -> bits per realized *directed* edge per step; used
@@ -681,6 +688,19 @@ class BoundAlgorithm:
         """Expected bits on the wire per step, summed over the network."""
         return float(self.spec.wire_bits(self.ctx.topo, self.ctx.hps, n))
 
+    def wire_bits_for(self, params0: object) -> float:
+        """Expected bits/step for a concrete model pytree: routes through
+        the per-leaf ``wire_bits_sizes`` accounting when the algorithm
+        registers one (tree-partitioned formats), else the flat formula."""
+        sizes = tuple(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params0)
+        )
+        if self.spec.wire_bits_sizes is not None:
+            return float(
+                self.spec.wire_bits_sizes(self.ctx.topo, self.ctx.hps, sizes)
+            )
+        return self.wire_bits(sum(sizes))
+
     def make_runner(
         self,
         *,
@@ -758,8 +778,7 @@ class BoundAlgorithm:
             )
             return
         history.pop("wire_bits", None)  # static runs keep the legacy schema
-        n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params0))
-        history["wire_bits_per_step"] = self.wire_bits(n)
+        history["wire_bits_per_step"] = self.wire_bits_for(params0)
         history["wire_bits_total"] = (
             history["wire_bits_per_step"] * history["steps_run"]
         )
@@ -945,6 +964,18 @@ class BatchedAlgorithm:
         training log prints; per-lane accounting lives in the history."""
         return float(self.spec.wire_bits(self.ctx0.topo, self.hps_list[0], n))
 
+    def wire_bits_for(self, params0: object) -> float:
+        """Config-0 expected bits/step for a concrete model pytree (see
+        :meth:`BoundAlgorithm.wire_bits_for`)."""
+        sizes = tuple(
+            int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params0)
+        )
+        if self.spec.wire_bits_sizes is not None:
+            return float(self.spec.wire_bits_sizes(
+                self.ctx0.topo, self.hps_list[0], sizes
+            ))
+        return self.wire_bits(sum(sizes))
+
     # -- drivers ------------------------------------------------------------
     def make_runner(
         self,
@@ -1010,7 +1041,7 @@ class BatchedAlgorithm:
         history["steps_dispatched"] = info["steps_dispatched"]
         history["lane_config"] = self.lane_config
         history["lane_seed"] = self.lane_seed
-        n = sum(
+        sizes = tuple(
             int(np.prod(leaf.shape))
             for leaf in jax.tree_util.tree_leaves(params0)
         )
@@ -1024,7 +1055,9 @@ class BatchedAlgorithm:
             history["wire_bits_per_step"] = total / np.maximum(steps_run, 1)
         else:
             per_cfg = np.array([
-                float(self.spec.wire_bits(self.ctx0.topo, h, n))
+                float(self.spec.wire_bits_sizes(self.ctx0.topo, h, sizes))
+                if self.spec.wire_bits_sizes is not None
+                else float(self.spec.wire_bits(self.ctx0.topo, h, sum(sizes)))
                 for h in self.hps_list
             ])
             history["wire_bits_per_step"] = per_cfg[self.lane_config]
@@ -1099,19 +1132,39 @@ def _anq_edge_bits(hps, n: int) -> float:
     return float(qsgd(hps.qsgd_levels).bits(n))
 
 
-def _pame_wire_bits(topo: Topology, hps: PaMEHp, n: int) -> float:
-    """Expected bits/step: receiver i pulls t_i sparse messages of
-    message_bits(s, n) in the 1/kappa_i fraction of steps it communicates
-    (int8 message format when exchange="compressed_q8")."""
-    s = max(1, int(round(hps.p * n)))
+def _pame_msgs_per_step(topo: Topology, hps: PaMEHp) -> float:
+    """Expected sparse messages on the wire per step: receiver i pulls t_i
+    messages in the 1/kappa_i fraction of steps it communicates."""
     t = np.maximum(1, np.floor(hps.nu * topo.degrees))
     if hps.homogeneous_kappa is not None:
         inv_kappa = 1.0 / float(hps.homogeneous_kappa)
     else:
         ks = np.arange(hps.kappa_lo, hps.kappa_hi + 1, dtype=np.float64)
         inv_kappa = float(np.mean(1.0 / ks))
+    return float(t.sum()) * inv_kappa
+
+
+def _pame_wire_bits(topo: Topology, hps: PaMEHp, n: int) -> float:
+    """Expected bits/step pricing one flat n-coordinate message of
+    message_bits(s, n) per transmission (int8 when exchange="compressed_q8").
+    The flat-partition formula; multi-leaf models route through
+    _pame_wire_bits_sizes wherever the leaf structure is known."""
+    s = max(1, int(round(hps.p * n)))
     value_bits = 8 if hps.exchange == "compressed_q8" else 64
-    return float(t.sum()) * inv_kappa * message_bits(s, n, value_bits)
+    return _pame_msgs_per_step(topo, hps) * message_bits(s, n, value_bits)
+
+
+def _pame_wire_bits_sizes(topo: Topology, hps: PaMEHp, sizes) -> float:
+    """Expected bits/step for a concrete model pytree: flat partition keeps
+    the single-vector formula exactly (bit-compatible history schema); tree
+    partition sums the per-leaf Eq.-(8) segments at their p_leaf rates."""
+    if hps.partition != "tree":
+        return _pame_wire_bits(topo, hps, sum(sizes))
+    value_bits = 8 if hps.exchange == "compressed_q8" else 64
+    rates = pme_leaf_rates(len(sizes), hps.p, hps.p_leaf)
+    return _pame_msgs_per_step(topo, hps) * tree_message_bits(
+        sizes, rates, value_bits
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -1138,6 +1191,7 @@ register(Algorithm(
         self_params=ctx.extras.get("fresh_params"),
         delivered=ctx.extras.get("delivered")),
     wire_bits=_pame_wire_bits,
+    wire_bits_sizes=_pame_wire_bits_sizes,
     setup=_pame_setup,
     # dense-exchange PaME consumes message-only delay natively: senders
     # transmit the ring-delayed stack while the lambda=0 / uncovered-
@@ -1150,7 +1204,8 @@ register(Algorithm(
     # p fixes the message payload size s = round(p·n) (shape-static);
     # nu / kappa_* are realized into TopologyArrays by setup, so batched
     # configs may sweep them without the scalars entering the trace.
-    static_hp_fields=("p", "mask_mode", "exchange", "mixing"),
+    static_hp_fields=("p", "mask_mode", "exchange", "mixing",
+                      "partition", "p_leaf"),
     setup_hp_fields=("nu", "kappa_lo", "kappa_hi", "homogeneous_kappa"),
 ))
 

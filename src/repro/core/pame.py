@@ -56,6 +56,34 @@ class PaMEConfig:
     mixing: str = "dense"    # node-axis contraction of the dense exchange:
                              # "dense" ([m, m] selection-matrix einsum) |
                              # "sparse" (padded neighbor gather, O(m·deg·n))
+    partition: str = "flat"  # message format over a multi-leaf model:
+                             # "flat" prices one concatenated vector (the
+                             # paper's single-vector Eq. (8)); "tree" makes
+                             # each pytree leaf its own message segment —
+                             # per-leaf rates (p_leaf) and per-leaf Eq.-(8)
+                             # accounting (sum over leaf occupancy patterns)
+    p_leaf: Optional[Tuple[float, ...]] = None  # per-leaf transmission
+                             # rates in tree_flatten order (tree partition
+                             # only); None broadcasts the global p
+
+    def __post_init__(self):
+        if self.partition not in ("flat", "tree"):
+            raise ValueError(
+                f"unknown partition {self.partition!r}; pick 'flat' or 'tree'"
+            )
+        if self.p_leaf is not None:
+            if self.partition != "tree":
+                raise ValueError("p_leaf requires partition='tree'")
+            # normalize to a hashable tuple: p_leaf sits in the registry's
+            # static_hp_fields, which compares configs for equality
+            object.__setattr__(
+                self, "p_leaf", tuple(float(r) for r in self.p_leaf)
+            )
+        if self.partition == "tree" and self.exchange != "dense":
+            raise NotImplementedError(
+                "partition='tree' needs exchange='dense'; the compressed "
+                "wire formats still assume a single flat payload"
+            )
 
 
 class TopologyArrays(NamedTuple):
@@ -143,6 +171,14 @@ def pame_step(
         jax.random.fold_in(state.key, state.step * 3 + i) for i in range(3)
     )
 
+    if cfg.partition == "tree":
+        # tree-partitioned exchange: each leaf is its own message segment
+        # with its own rate; a float keeps the flat code path bit-identical
+        num_leaves = len(jax.tree_util.tree_leaves(state.params))
+        rate = pme.leaf_rates(num_leaves, cfg.p, cfg.p_leaf)
+    else:
+        rate = cfg.p
+
     comm_mask = (state.step % topo.kappa) == 0  # k in K_i
     survivors = None
     if realization is not None:
@@ -159,7 +195,7 @@ def pame_step(
         n_messages = jnp.sum(sel.astype(jnp.int32))
         sel_recv = sel if delivered is None else sel & delivered
         v_bar = pme.pme_average_pytree_padded(
-            k_mask, state.params, topo.nbrs, sel_recv, cfg.p,
+            k_mask, state.params, topo.nbrs, sel_recv, rate,
             mode=cfg.mask_mode, pad=~topo.valid, self_params=self_params,
         )
     else:
@@ -187,7 +223,7 @@ def pame_step(
             )
         else:
             v_bar = pme.pme_average_pytree(
-                k_mask, state.params, a, cfg.p, mode=cfg.mask_mode,
+                k_mask, state.params, a, rate, mode=cfg.mask_mode,
                 self_params=self_params,
             )
     if param_shardings is not None:
@@ -222,17 +258,22 @@ def pame_step(
     }
     if realization is not None:
         # realized Eq.-(8) accounting: each selected surviving neighbor
-        # transmits one sparse message of s = round(p·n) of n coordinates,
-        # in the int8 wire format when exchange="compressed_q8".
-        n_total = sum(
+        # transmits one sparse message, in the int8 wire format when
+        # exchange="compressed_q8".  Flat partition prices one concatenated
+        # vector of s = round(p·n_total) coordinates; tree partition sums
+        # the per-leaf segments (their own s_leaf + occupancy pattern each).
+        sizes = [
             int(np.prod(leaf.shape[1:]))
             for leaf in jax.tree_util.tree_leaves(state.params)
-        )
-        s = max(1, int(round(cfg.p * n_total)))
+        ]
         value_bits = 8 if cfg.exchange == "compressed_q8" else 64
-        metrics["wire_bits"] = n_messages.astype(jnp.float32) * float(
-            pme.message_bits(s, n_total, value_bits)
-        )
+        if cfg.partition == "tree":
+            bits = pme.tree_message_bits(sizes, rate, value_bits)
+        else:
+            n_total = sum(sizes)
+            s = max(1, int(round(cfg.p * n_total)))
+            bits = pme.message_bits(s, n_total, value_bits)
+        metrics["wire_bits"] = n_messages.astype(jnp.float32) * float(bits)
     return new_state, metrics
 
 

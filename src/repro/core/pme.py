@@ -34,6 +34,8 @@ __all__ = [
     "pme_average_pytree_padded",
     "naive_average",
     "message_bits",
+    "leaf_rates",
+    "tree_message_bits",
 ]
 
 
@@ -176,7 +178,7 @@ def pme_average_pytree(
     key: jax.Array,
     params: object,  # pytree with [m, ...] leaves
     a: jax.Array,
-    p: float,
+    p,  # float, or per-leaf rate sequence (tree partition — see leaf_rates)
     mode: str = "bernoulli",
     self_params: Optional[object] = None,
 ) -> object:
@@ -185,7 +187,9 @@ def pme_average_pytree(
     Each leaf is treated as its own message segment with the same keep
     fraction p = s/n; the coordinate mask of sender j is regenerated from
     `key` fold_in'd with the leaf index, mirroring the seed-based wire
-    format (only values + a seed move between nodes).
+    format (only values + a seed move between nodes).  Passing a sequence
+    of rates instead of a scalar gives each leaf its own keep fraction
+    (the tree-partitioned exchange; order = tree_flatten leaf order).
 
     `self_params` overrides the receiver's *own* view: the lambda=0
     fallback reads from it instead of `params`.  The bounded-staleness
@@ -200,14 +204,16 @@ def pme_average_pytree(
         else jax.tree_util.tree_flatten(self_params)[0]
     )
     m = leaves[0].shape[0]
+    per_leaf = isinstance(p, (tuple, list))
     out = []
     for idx, leaf in enumerate(leaves):
         lkey = jax.random.fold_in(key, idx)
         own = self_leaves[idx]
+        p_i = p[idx] if per_leaf else p
         if mode == "exact":
             flat = leaf.reshape(m, -1)
             n = flat.shape[1]
-            s = max(1, int(round(p * n)))
+            s = max(1, int(round(p_i * n)))
             masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
             from repro.core.mixing import default_impl
 
@@ -245,7 +251,7 @@ def pme_average_pytree(
             # tensor sharding) intact; only the node axis is contracted.
             # Operands stay in the leaf dtype (bf16 at model scale) with f32
             # accumulation — counts <= m are exactly representable.
-            masks = jax.random.bernoulli(lkey, p, leaf.shape)
+            masks = jax.random.bernoulli(lkey, p_i, leaf.shape)
             mask_t = masks.astype(leaf.dtype)
             a_t = a.astype(leaf.dtype)
             agg = jnp.einsum(
@@ -267,7 +273,7 @@ def pme_average_pytree_padded(
     params: object,  # pytree with [m, ...] leaves
     nbrs: jax.Array,  # [m, d] padded neighbor ids
     sel: jax.Array,   # [m, d] bool — sample_neighbor_selection_padded output
-    p: float,
+    p,  # float, or per-leaf rate sequence (tree partition)
     mode: str = "bernoulli",
     pad: Optional[jax.Array] = None,  # [m, d] bool — structural padding
     impl: Optional[str] = None,       # gossip contraction (see core.mixing)
@@ -296,20 +302,22 @@ def pme_average_pytree_padded(
     )
     m, d = nbrs.shape
     sel_f = sel.astype(jnp.float32)
+    per_leaf = isinstance(p, (tuple, list))
     out = []
     for idx, leaf in enumerate(leaves):
         lkey = jax.random.fold_in(key, idx)
         own = self_leaves[idx]
         shape = leaf.shape
+        p_i = p[idx] if per_leaf else p
         if mode == "exact":
             flat = leaf.reshape(m, -1)
             n = flat.shape[1]
-            s = max(1, int(round(p * n)))
+            s = max(1, int(round(p_i * n)))
             masks = sample_coordinate_masks(lkey, m, n, s, mode="exact")
             payload = jnp.where(masks, flat, 0.0)
             mask_f = masks.astype(jnp.float32)
         else:
-            masks = jax.random.bernoulli(lkey, p, shape)
+            masks = jax.random.bernoulli(lkey, p_i, shape)
             flat = leaf
             payload = flat * masks.astype(flat.dtype)
             mask_f = masks.astype(jnp.float32)
@@ -337,3 +345,48 @@ def message_bits(s: int, n: int, value_bits: int = 64) -> int:
     if value_bits == 8:
         return 8 * s + n + 32
     return (value_bits - 1) * s + n
+
+
+def leaf_rates(num_leaves: int, p: float, p_leaf=None) -> Tuple[float, ...]:
+    """Resolve the per-leaf transmission rates of a tree-partitioned message.
+
+    ``p_leaf=None`` broadcasts the global rate p to every leaf; otherwise
+    ``p_leaf`` must list one rate in (0, 1] per pytree leaf, in
+    ``tree_flatten`` leaf order.
+    """
+    if p_leaf is None:
+        rates = (float(p),) * num_leaves
+    else:
+        rates = tuple(float(r) for r in p_leaf)
+        if len(rates) != num_leaves:
+            raise ValueError(
+                f"p_leaf has {len(rates)} rates but the model pytree has "
+                f"{num_leaves} leaves"
+            )
+    for r in rates:
+        if not 0.0 < r <= 1.0:
+            raise ValueError(f"per-leaf transmission rate {r} outside (0, 1]")
+    return rates
+
+
+def tree_message_bits(sizes, rates, value_bits: int = 64) -> int:
+    """Eq. (8) cost of one tree-partitioned message.
+
+    Each pytree leaf is its own message segment: leaf of n_leaf coordinates
+    at rate r carries s_leaf = max(1, round(r·n_leaf)) payload values plus
+    its own n_leaf-bit occupancy pattern, so the total is
+    sum_leaf message_bits(s_leaf, n_leaf).  This is what actually moves on
+    the wire for a multi-leaf model — the flat formula
+    message_bits(round(p·n_total), n_total) prices a single occupancy
+    pattern over the concatenated vector, which no leaf-wise sampler emits.
+    """
+    if isinstance(rates, float):
+        rates = (rates,) * len(sizes)
+    if len(rates) != len(sizes):
+        raise ValueError(
+            f"got {len(rates)} rates for {len(sizes)} leaf sizes"
+        )
+    return sum(
+        message_bits(max(1, int(round(r * n))), int(n), value_bits)
+        for r, n in zip(rates, sizes)
+    )

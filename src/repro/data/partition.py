@@ -25,12 +25,29 @@ def label_skew_partition(
     labels: np.ndarray, m: int, classes_per_node: int, seed: int = 0
 ) -> List[np.ndarray]:
     """Each node is assigned `classes_per_node` classes and receives an
-    equal share of every assigned class's samples."""
+    equal share of every assigned class's samples.
+
+    Raises ValueError when `classes_per_node` falls outside
+    ``[1, n_classes]`` (beyond n_classes the round-robin would silently
+    assign the same class to a node twice) and when any node would end up
+    with an empty shard (downstream batchers cannot sample from it).
+    """
     rng = np.random.default_rng(seed)
     n_classes = int(labels.max()) + 1
+    if not 1 <= classes_per_node <= n_classes:
+        raise ValueError(
+            f"classes_per_node={classes_per_node} outside [1, {n_classes}]: "
+            f"the dataset has {n_classes} classes, so larger values would "
+            "double-assign a class to the same node"
+        )
     by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
-    for c in by_class:
-        rng.shuffle(c)
+    for c, idx in enumerate(by_class):
+        if len(idx) == 0:
+            raise ValueError(
+                f"class {c} has no samples; every class in [0, labels.max()] "
+                "must be populated to cover its assigned nodes"
+            )
+        rng.shuffle(idx)
     # round-robin class assignment so every class is covered
     assign = [
         [(i * classes_per_node + j) % n_classes for j in range(classes_per_node)]
@@ -46,9 +63,19 @@ def label_skew_partition(
     for c in range(n_classes):
         for k, node in enumerate(takers[c]):
             parts[node].append(shares[c][k])
-    return [
-        np.sort(np.concatenate(p)) if p else np.array([], np.int64) for p in parts
-    ]
+    out = []
+    for i, p in enumerate(parts):
+        shard = np.sort(np.concatenate(p)) if p else np.array([], np.int64)
+        if len(shard) == 0:
+            starved = assign[i]
+            raise ValueError(
+                f"node {i} received an empty shard (assigned classes "
+                f"{starved} have too few samples for "
+                f"{[len(takers[c]) for c in starved]} takers); use more "
+                "data or fewer nodes"
+            )
+        out.append(shard)
+    return out
 
 
 def dirichlet_partition(

@@ -60,10 +60,14 @@ from repro.models.model import init_params, train_loss
 
 def _hps_from_args(name: str, args):
     if name == "pame":
+        p_leaf = None
+        if getattr(args, "p_leaf", None):
+            p_leaf = tuple(float(x) for x in args.p_leaf.split(","))
         return PaMEHp(
             nu=args.nu, p=args.p, gamma=args.gamma, sigma0=args.sigma0,
             kappa_lo=args.kappa_lo, kappa_hi=args.kappa_hi,
             mask_mode="bernoulli",
+            partition=getattr(args, "partition", "flat"), p_leaf=p_leaf,
         )
     return {
         "dpsgd": lambda: DPSGDHp(lr=args.lr),
@@ -72,6 +76,17 @@ def _hps_from_args(name: str, args):
         "beer": lambda: BeerHp(lr=args.lr),
         "anq_nids": lambda: AnqNidsHp(lr=args.lr),
     }[name]()
+
+
+def batch_stream_rng(seed: int, step: int) -> np.random.Generator:
+    """The per-step batch-window RNG: independent across steps AND runs.
+
+    Seeding from the (seed, step) pair keeps every step's draw independent
+    while giving different --seed runs genuinely different data streams —
+    seeding from the step alone made every run sample identical windows,
+    so cross-run mean±std understated the data variance.
+    """
+    return np.random.default_rng((int(seed), 1000 + int(step)))
 
 
 def _parse_rate_pair(spec):
@@ -173,7 +188,7 @@ def build_everything(args):
     offsets = np.arange(args.seq)
 
     def make_batch(step: int):
-        rng = np.random.default_rng(1000 + step)
+        rng = batch_stream_rng(args.seed, step)
         starts = rng.integers(0, corpus.tokens.shape[1] - args.seq - 1, (m, args.batch))
         # one fancy-indexed gather for all m x batch windows — the nested
         # python-loop version dominated step time on smoke configs
@@ -217,10 +232,10 @@ def build_everything(args):
         )
         state = bound.init(jax.random.PRNGKey(args.seed + 1), stacked, batch0)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params0))
-    return cfg, bound, state, make_batch, n_params
+    return cfg, bound, state, make_batch, n_params, params0
 
 
-def main() -> None:
+def make_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
@@ -288,6 +303,15 @@ def main() -> None:
     ap.add_argument("--rho", type=float, default=0.01, help="DFedSAM ascent radius")
     ap.add_argument("--nu", type=float, default=0.5)
     ap.add_argument("--p", type=float, default=0.2)
+    ap.add_argument("--partition", default="flat", choices=["flat", "tree"],
+                    help="PaME message format over the model pytree: 'flat' "
+                         "prices one concatenated vector; 'tree' gives each "
+                         "leaf its own segment — per-leaf rates and per-leaf "
+                         "Eq.-(8) wire accounting")
+    ap.add_argument("--p-leaf", default=None, metavar="R1,R2,...",
+                    help="per-leaf transmission rates (tree partition), one "
+                         "per pytree leaf in tree_flatten order; default "
+                         "broadcasts --p")
     ap.add_argument("--gamma", type=float, default=1.001)
     ap.add_argument("--sigma0", type=float, default=20.0)
     ap.add_argument("--kappa-lo", type=int, default=3)
@@ -301,15 +325,21 @@ def main() -> None:
                     help="persistent XLA compilation cache directory "
                          "(default: $REPRO_COMPILE_CACHE; unset = off). "
                          "Warm runs skip compilation for identical programs.")
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv=None) -> None:
+    args = make_parser().parse_args(argv)
 
     cache_dir = engine.setup_compilation_cache(args.compile_cache)
     if cache_dir:
         print(f"[train] compilation cache at {cache_dir}", flush=True)
 
-    cfg, bound, state, make_batch, n_params = build_everything(args)
+    cfg, bound, state, make_batch, n_params, params0 = build_everything(args)
     lanes = bound.lanes if args.seeds > 1 else None
-    wire_per_step = bound.wire_bits(n_params)
+    # per-leaf Eq.-(8) accounting when the algorithm partitions over the
+    # model pytree (--partition tree); flat formats price sum(sizes)
+    wire_per_step = bound.wire_bits_for(params0)
     scen_tag = bound.scenario.name if bound.dynamic else "static"
     if bound.faulty:
         fm = bound.faults
@@ -318,9 +348,10 @@ def main() -> None:
             f"crash={fm.crash}/{fm.rejoin}, delay={fm.delay}<= {fm.max_delay}, "
             f"repair={fm.repair})"
         )
+    part_tag = f"partition={args.partition} " if args.algo == "pame" else ""
     print(
-        f"[train] algo={args.algo} mixing={args.mixing} nodes={args.nodes} "
-        f"scenario={scen_tag} "
+        f"[train] algo={args.algo} mixing={args.mixing} {part_tag}"
+        f"nodes={args.nodes} scenario={scen_tag} "
         + (f"seeds={args.seeds} (batched lanes) " if lanes else "")
         + f"params={n_params/1e6:.2f}M wire_bits/step={wire_per_step:.3e} "
         f"({wire_per_step/8e6:.2f} MB/step network-wide"
@@ -331,6 +362,7 @@ def main() -> None:
     carries_aux = bound.temporal or getattr(bound, "faulty", False)
     aux = bound.aux_init(state) if carries_aux else None
     start = 0
+    resumed_bits = None
     if args.ckpt_dir:
         os.makedirs(args.ckpt_dir, exist_ok=True)
         from repro.checkpoint.store import latest_step
@@ -340,14 +372,30 @@ def main() -> None:
             # the auxiliary carry (fault/temporal Markov state + staleness
             # ring) is checkpointed alongside the state, so a resumed run
             # continues the exact chains — the crash-rejoin catch-up path
-            # restores from the same store
+            # restores from the same store.  The payload also carries the
+            # realized cumulative wire bits: re-deriving them as
+            # wire_per_step * start would charge the static full-graph
+            # rate for steps that actually ran under dynamic/fault
+            # accounting.
+            payload = {"state": state, "cum_bits": np.zeros((), np.float64)}
             if carries_aux:
-                restored = restore_checkpoint(
-                    args.ckpt_dir, {"state": state, "aux": aux}, last
-                )
-                state, aux = restored["state"], restored["aux"]
-            else:
-                state = restore_checkpoint(args.ckpt_dir, state, last)
+                payload["aux"] = aux
+            try:
+                restored = restore_checkpoint(args.ckpt_dir, payload, last)
+                resumed_bits = float(restored["cum_bits"])
+            except ValueError:
+                # legacy checkpoint (no cum_bits leaf): restore the old
+                # payload shape and fall back to the static estimate
+                if carries_aux:
+                    restored = restore_checkpoint(
+                        args.ckpt_dir, {"state": state, "aux": aux}, last
+                    )
+                else:
+                    restored = {"state": restore_checkpoint(
+                        args.ckpt_dir, state, last)}
+            state = restored["state"]
+            if carries_aux:
+                aux = restored["aux"]
             start = last
             print(f"[train] resumed from step {last}")
 
@@ -358,7 +406,7 @@ def main() -> None:
     log_every = max(args.log_every or args.chunk, 1)
     t0 = time.time()
     k = start
-    cum_bits = wire_per_step * start
+    cum_bits = resumed_bits if resumed_bits is not None else wire_per_step * start
     stale_hist = None
     next_ckpt = (start // args.ckpt_every + 1) * args.ckpt_every
     while k < args.steps:
@@ -415,10 +463,11 @@ def main() -> None:
                 flush=True,
             )
         if args.ckpt_dir and k >= next_ckpt:
-            save_checkpoint(
-                args.ckpt_dir, k,
-                {"state": state, "aux": aux} if carries_aux else state,
-            )
+            payload = {"state": state,
+                       "cum_bits": np.asarray(cum_bits, np.float64)}
+            if carries_aux:
+                payload["aux"] = aux
+            save_checkpoint(args.ckpt_dir, k, payload)
             next_ckpt = (k // args.ckpt_every + 1) * args.ckpt_every
     if stale_hist is not None:
         total = max(float(stale_hist.sum()), 1.0)

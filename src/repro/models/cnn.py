@@ -40,14 +40,21 @@ def _group_norm(x, scale, bias, groups=8, eps=1e-5):
 # ---------------------------------------------------------------------------
 # Example 3 CNN: conv32-pool-conv64-pool-fc
 # ---------------------------------------------------------------------------
-def cnn_init(key: jax.Array, in_ch: int = 1, n_classes: int = 10) -> dict:
+def cnn_init(
+    key: jax.Array, in_ch: int = 1, n_classes: int = 10, width: int = 1
+) -> dict:
+    """`width` multiplies every channel/feature count (width=1 is the
+    paper's Example 3; width=2 crosses 1M parameters for the real-workload
+    communication benchmarks).  `cnn_apply` reads all shapes from the
+    params, so no apply-side change is needed."""
     ks = jax.random.split(key, 4)
+    c1, c2, hid = 32 * width, 64 * width, 128 * width
     return {
-        "c1": _conv_init(ks[0], 3, 3, in_ch, 32),
-        "c2": _conv_init(ks[1], 3, 3, 32, 64),
-        "fc1": jax.random.normal(ks[2], (7 * 7 * 64, 128)) * (7 * 7 * 64) ** -0.5,
-        "b1": jnp.zeros((128,)),
-        "fc2": jax.random.normal(ks[3], (128, n_classes)) * 128 ** -0.5,
+        "c1": _conv_init(ks[0], 3, 3, in_ch, c1),
+        "c2": _conv_init(ks[1], 3, 3, c1, c2),
+        "fc1": jax.random.normal(ks[2], (7 * 7 * c2, hid)) * (7 * 7 * c2) ** -0.5,
+        "b1": jnp.zeros((hid,)),
+        "fc2": jax.random.normal(ks[3], (hid, n_classes)) * hid ** -0.5,
         "b2": jnp.zeros((n_classes,)),
     }
 

@@ -1,0 +1,79 @@
+"""Non-IID partitioner validation (label skew) + heterogeneity example smoke.
+
+The label-skew partitioner used to accept classes_per_node > n_classes
+(silently double-assigning a class to the same node) and could emit empty
+shards that break NodeBatcher downstream — both now fail loudly.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.partition import label_skew_partition
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_label_skew_valid_partition_covers_all_samples():
+    labels = np.repeat(np.arange(10), 20)
+    m = 4
+    parts = label_skew_partition(labels, m, classes_per_node=3, seed=0)
+    assert len(parts) == m
+    # disjoint cover of all samples
+    joined = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(joined, np.arange(len(labels)))
+    # each shard touches at most C classes
+    for p in parts:
+        assert len(np.unique(labels[p])) <= 3
+        assert len(p) > 0
+
+
+def test_label_skew_full_class_coverage_is_iid_like():
+    labels = np.repeat(np.arange(5), 8)
+    parts = label_skew_partition(labels, 2, classes_per_node=5, seed=1)
+    for p in parts:
+        assert set(np.unique(labels[p])) == set(range(5))
+
+
+def test_label_skew_rejects_classes_per_node_above_n_classes():
+    labels = np.repeat(np.arange(5), 10)
+    with pytest.raises(ValueError, match="classes_per_node"):
+        label_skew_partition(labels, 3, classes_per_node=6, seed=0)
+
+
+def test_label_skew_rejects_nonpositive_classes_per_node():
+    labels = np.repeat(np.arange(5), 10)
+    with pytest.raises(ValueError, match="classes_per_node"):
+        label_skew_partition(labels, 3, classes_per_node=0, seed=0)
+
+
+def test_label_skew_rejects_empty_shards():
+    # 10 classes x 1 sample, 12 nodes at C=1: classes 0 and 1 each get two
+    # takers but hold a single sample, so some node's shard must be empty
+    labels = np.arange(10)
+    with pytest.raises(ValueError, match="empty shard"):
+        label_skew_partition(labels, 12, classes_per_node=1, seed=0)
+
+
+def test_label_skew_rejects_missing_class():
+    # class 1 absent although labels.max() == 2
+    labels = np.array([0, 0, 2, 2])
+    with pytest.raises(ValueError, match="no samples"):
+        label_skew_partition(labels, 2, classes_per_node=1, seed=0)
+
+
+@pytest.mark.parametrize("partition", ["flat", "tree"])
+def test_cnn_heterogeneity_example_smoke(partition):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "cnn_heterogeneity.py"),
+         "--steps", "4", "--nodes", "4", "--classes", "3",
+         "--partition", partition],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[hetero] PaME" in proc.stdout
+    assert "[hetero] D-PSGD" in proc.stdout
