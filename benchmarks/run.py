@@ -522,7 +522,7 @@ def _merge_artifact(fname, key, value):
             data = {}
     data[key] = value
     with open(path, "w") as f:
-        json.dump(data, f, indent=1, default=float)
+        json.dump(data, f, indent=1, default=float, sort_keys=True)
     print(f"# wrote {path} [{key}]")
 
 
@@ -931,7 +931,7 @@ def bench_sweep(quick=False):
         "compile_cache": cache_table,
     }
     with open(os.path.join(ART, "BENCH_sweep.json"), "w") as f:
-        json.dump(artifact, f, indent=1, default=float)
+        json.dump(artifact, f, indent=1, default=float, sort_keys=True)
     print(f"# wrote {os.path.join(ART, 'BENCH_sweep.json')}")
     _merge_artifact(
         "BENCH_gossip.json", "compile_cache",
@@ -1406,6 +1406,109 @@ def bench_roofline(quick=False):
     RESULTS["roofline"] = rows
 
 
+def bench_serving(quick=False):
+    """Serve-while-train frontier: final accuracy vs served QPS as the
+    inference arrival process intensifies.  Each preset drives the event
+    clock from `repro.serve.events` through `bind_batched(pacing=...)`:
+    nodes whose request queue exceeds the defer threshold skip that
+    round's exchange (a load-induced straggler — PaME's partial-exchange
+    semantics absorb it natively) while still taking their local step.
+    `off` is the anchor: a static pacing binds the plain program, so its
+    row is the no-serving baseline.  Queueing latency is recovered from
+    the histories by Little's law (mean queue depth / per-node service
+    rate).  The frontier is emitted into EXPERIMENTS.md."""
+    from repro.core import algorithms as ALG
+    from repro.serve.events import ServePacing, get_arrival
+
+    m, n = 16, 300
+    steps = 80 if quick else 200
+    seeds = list(range(SWEEP_SEEDS))
+    presets = ("off", "quiet", "steady", "bursty", "rush")
+    capacity, defer = 2, 4
+    topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
+    batch, grad_fn, objective, accuracy = logreg_problem(m, n, spn=64, seed=0)
+    chunk = chunk_for(steps)
+    hps = {
+        "pame": PaMEConfig(nu=0.2, p=0.2, gamma=1.002, sigma0=1.0,
+                           kappa_lo=3, kappa_hi=7),
+        "dpsgd": ALG.DPSGDHp(lr=0.1),
+    }
+    table = {}
+    md_rows = []
+    for name in ("pame", "dpsgd"):
+        for preset in presets:
+            pac = ServePacing(get_arrival(preset), capacity=capacity,
+                              defer_threshold=defer)
+            ba = ALG.get_algorithm(name).bind_batched(
+                grad_fn, topo, [hps[name]], seeds=seeds,
+                mixing="sparse", pacing=pac,
+            )
+            runner = ba.make_runner(
+                objective_fn=objective, tol_std=0.0, chunk_size=chunk
+            )
+            t0 = time.perf_counter()
+            state, hist = runner(jnp.zeros(n), m, lambda k: batch, steps)
+            wall = time.perf_counter() - t0
+            mean_w = np.asarray(
+                jax.tree_util.tree_map(
+                    lambda x: x.mean(axis=1), ba.params_of(state)
+                )
+            )
+            accs = [accuracy(jnp.asarray(mean_w[l])) for l in range(ba.lanes)]
+            am, a_s = mean_std(accs)
+            if "served_reqs" in hist:
+                served = np.asarray(hist["served_reqs"])  # [steps, lanes]
+                queue = np.asarray(hist["queue_depth"])
+                deferred = np.asarray(hist["deferred_nodes"])
+                qps = float(served.sum(axis=0).mean()) / steps
+                per_node_rate = qps / m
+                # Little's law: W = L / lambda (sojourn in rounds)
+                latency = (float(queue.mean()) / per_node_rate
+                           if per_node_rate > 0 else 0.0)
+                defer_frac = float(deferred.mean()) / m
+            else:
+                # static pacing was dropped at bind: nothing served
+                qps, latency, defer_frac = 0.0, 0.0, 0.0
+            table[f"{name}@{preset}"] = {
+                "preset": preset, "accuracy": am, "accuracy_std": a_s,
+                "served_qps": qps, "latency_rounds": latency,
+                "defer_frac": defer_frac, "seeds": len(seeds),
+            }
+            csv_row(
+                f"serving/{name}/{preset}",
+                wall / max(int(hist["steps_dispatched"]) * ba.lanes, 1) * 1e6,
+                f"acc={am:.4f}±{a_s:.4f};qps={qps:.2f}"
+                f";latency_rounds={latency:.2f};defer_frac={defer_frac:.3f}",
+            )
+            md_rows.append((
+                name, preset, f"{am:.4f} ± {a_s:.4f}", f"{qps:.2f}",
+                f"{latency:.2f}", f"{defer_frac*100:.1f}%",
+            ))
+    for name in ("pame", "dpsgd"):
+        drop = (table[f"{name}@off"]["accuracy"]
+                - table[f"{name}@rush"]["accuracy"])
+        csv_row(f"serving/acc_cost_{name}", 0.0,
+                f"acc_drop@rush={drop:.4f}")
+    _update_experiments_md(
+        "serving",
+        "## Serve while you train: accuracy vs served QPS\n\n"
+        f"Example 2 logistic regression (m={m}, n={n}), erdos_renyi(p=0.4), "
+        f"{steps} steps, per-node serve capacity {capacity} req/round, "
+        f"defer threshold {defer}.  Overloaded nodes defer that round's "
+        "gossip (self-loop in the realized matrix) but keep their local "
+        "gradient step — the paper's straggler semantics, triggered by "
+        f"inference load.  Mean ± std over {len(seeds)} batched seed "
+        "lanes (`bind_batched(pacing=...)`); latency is queueing sojourn "
+        "via Little's law in units of training rounds.\n\n"
+        + _fmt_md_table(
+            ("algo", "arrival", "accuracy", "served QPS (net)",
+             "latency (rounds)", "deferred node-rounds"),
+            md_rows,
+        ),
+    )
+    RESULTS["serving"] = table
+
+
 BENCHES = {
     "transmission_rate": bench_transmission_rate,
     "participation": bench_participation,
@@ -1417,6 +1520,7 @@ BENCHES = {
     "sweep": bench_sweep,
     "gossip": bench_gossip,
     "scenarios": bench_scenarios,
+    "serving": bench_serving,
     "heterogeneity": bench_heterogeneity,
     "comm_volume": bench_comm_volume,
     "kernels": bench_kernels,
@@ -1462,8 +1566,11 @@ def main() -> None:
         except (json.JSONDecodeError, OSError):
             results = {}
     results.update(RESULTS)
+    # sort_keys gives byte-stable artifacts: section order no longer
+    # depends on which benches ran (or in what order), so repeat runs
+    # and --only refreshes diff cleanly
     with open(out_path, "w") as f:
-        json.dump(results, f, indent=1, default=float)
+        json.dump(results, f, indent=1, default=float, sort_keys=True)
     print(f"# wrote {out_path}")
 
 

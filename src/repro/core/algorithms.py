@@ -56,6 +56,7 @@ from repro.core.mixing import Mixer, make_mixer, ring_gather
 from repro.core.pme import leaf_rates as pme_leaf_rates
 from repro.core.pme import message_bits, tree_message_bits
 from repro.core.topology import Topology
+from repro.serve.events import PacedCarry, ServePacing
 
 AnyScenario = Union[scen_mod.Scenario, temp_mod.TemporalScenario]
 
@@ -179,6 +180,7 @@ class Algorithm:
         seed: int = 0,
         scenario: Optional[AnyScenario] = None,
         faults: Optional[flt_mod.FaultModel] = None,
+        pacing: Optional[ServePacing] = None,
     ) -> "BoundAlgorithm":
         """Close the spec over (grad_fn, topology, hps, mixing, scenario).
 
@@ -202,6 +204,18 @@ class Algorithm:
         signature is the temporal one (aux carries the ``FaultCarry``).
         A zero-rate ``FaultModel`` binds the plain fault-free program,
         bit-identical to ``faults=None``.
+
+        ``pacing`` (``repro.serve.events.ServePacing``) layers the
+        serve-while-train event clock over the (possibly static) base
+        scenario: per-round request arrivals queue against each node,
+        and a node whose backlog exceeds the defer threshold *defers its
+        gossip exchange* that round exactly like a scenario straggler
+        (local update still applied, self-loop in B^k — mean-preserving
+        by construction).  The event clock threads through the engine's
+        auxiliary carry slot (``PacedCarry``), composing with a bound
+        ``FaultModel`` whose carry rides in the ``inner`` slot.  A
+        zero-rate pacing binds the plain unpaced program, bit-identical
+        to ``pacing=None``.
         """
         hps = self.hp_cls() if hps is None else hps
         if not isinstance(hps, self.hp_cls):
@@ -216,10 +230,13 @@ class Algorithm:
                           extras=extras)
         if faults is not None and faults.is_static:
             faults = None  # zero-rate model == the fault-free program
-        if faults is not None:
+        if pacing is not None and pacing.is_static:
+            pacing = None  # zero-rate process == the unpaced program
+        if faults is not None or pacing is not None:
             if isinstance(scenario, temp_mod.TemporalScenario):
+                what = "faults" if faults is not None else "pacing"
                 raise NotImplementedError(
-                    "faults cannot stack on a TemporalScenario: fold the "
+                    f"{what} cannot stack on a TemporalScenario: fold the "
                     "staleness into FaultModel(delay=..., max_delay=...) "
                     "and the link/node dynamics into a base Scenario"
                 )
@@ -228,7 +245,7 @@ class Algorithm:
             return BoundAlgorithm(
                 self, ctx, scenario=base,
                 scen_arrays=scen_mod.make_scenario_arrays(topo, base),
-                mixing_mode=mixing, faults=faults,
+                mixing_mode=mixing, faults=faults, pacing=pacing,
             )
         if scenario is not None and not scenario.is_static:
             return BoundAlgorithm(
@@ -249,6 +266,7 @@ class Algorithm:
         seed: int = 0,
         scenario: Optional[AnyScenario] = None,
         faults: Optional[flt_mod.FaultModel] = None,
+        pacing: Optional[ServePacing] = None,
     ) -> "BatchedAlgorithm":
         """Close the spec over S seeds × C configs as ONE lane-batched step.
 
@@ -274,7 +292,9 @@ class Algorithm:
         sees the same path — paired comparisons).  A non-static
         ``faults`` model likewise folds each lane's seed into the fault
         key — independent fault sample paths per seed, shared across
-        configs.
+        configs; a non-static ``pacing`` folds each lane's seed into the
+        arrival-process key the same way — independent request traces
+        per seed, shared across configs.
         """
         hps_list = [self.hp_cls() if h is None else h
                     for h in (hps_list or [None])]
@@ -344,11 +364,14 @@ class Algorithm:
                            extras=shared_extras)
         if faults is not None and faults.is_static:
             faults = None  # zero-rate model == the fault-free program
+        if pacing is not None and pacing.is_static:
+            pacing = None  # zero-rate process == the unpaced program
         scen_arrays = None
-        if faults is not None:
+        if faults is not None or pacing is not None:
             if isinstance(scenario, temp_mod.TemporalScenario):
+                what = "faults" if faults is not None else "pacing"
                 raise NotImplementedError(
-                    "faults cannot stack on a TemporalScenario: fold the "
+                    f"{what} cannot stack on a TemporalScenario: fold the "
                     "staleness into FaultModel(delay=..., max_delay=...) "
                     "and the link/node dynamics into a base Scenario"
                 )
@@ -362,7 +385,7 @@ class Algorithm:
         return BatchedAlgorithm(
             self, ctx0, eff_hps, seeds, swept, stacked_extras,
             mixing_mode=mixing, scenario=scenario, scen_arrays=scen_arrays,
-            faults=faults,
+            faults=faults, pacing=pacing,
         )
 
 
@@ -391,6 +414,8 @@ class BoundAlgorithm:
         mixing_mode: str = "sparse",
         faults: Optional[flt_mod.FaultModel] = None,
         fault_key: Optional[jax.Array] = None,
+        pacing: Optional[ServePacing] = None,
+        pace_key: Optional[jax.Array] = None,
     ):
         self.spec = spec
         self.ctx = ctx
@@ -401,6 +426,10 @@ class BoundAlgorithm:
         if faults is not None and fault_key is None:
             fault_key = jax.random.PRNGKey(faults.seed)
         self.fault_key = fault_key
+        self.pacing = pacing
+        if pacing is not None and pace_key is None:
+            pace_key = jax.random.PRNGKey(pacing.process.seed)
+        self.pace_key = pace_key
 
     @property
     def name(self) -> str:
@@ -429,8 +458,14 @@ class BoundAlgorithm:
         return self.faults is not None
 
     @property
+    def paced(self) -> bool:
+        """True when a non-static ServePacing is bound (step threads the
+        serve-event clock through the engine's auxiliary carry slot)."""
+        return self.pacing is not None
+
+    @property
     def carries_aux(self) -> bool:
-        return self.temporal or self.faulty
+        return self.temporal or self.faulty or self.paced
 
     @property
     def params_of(self) -> Callable:
@@ -447,13 +482,23 @@ class BoundAlgorithm:
 
     def aux_init(self, state: object):
         """Initial auxiliary carry: the FaultCarry of a fault-injected
-        bind, or the TemporalCarry of a temporal bind (stationary Markov
-        draws + the staleness ring seeded with the initial parameters)."""
+        bind, the TemporalCarry of a temporal bind (stationary Markov
+        draws + the staleness ring seeded with the initial parameters),
+        or — for a paced bind — a PacedCarry wrapping the fresh serve
+        event clock around the inner FaultCarry (None when no faults)."""
+        inner = None
         if self.faulty:
-            return flt_mod.fault_carry_init(
+            inner = flt_mod.fault_carry_init(
                 self.faults, self.scen_arrays, self.spec.params_of(state),
                 self.fault_key,
             )
+        if self.paced:
+            return PacedCarry(
+                events=self.pacing.init(self.scen_arrays.m, self.pace_key),
+                inner=inner,
+            )
+        if inner is not None:
+            return inner
         if not self.temporal:
             raise TypeError(f"{self.name} is not bound to a TemporalScenario")
         return temp_mod.temporal_carry_init(
@@ -470,6 +515,26 @@ class BoundAlgorithm:
                 f"{self.name} is bound to scenario {self.scenario.name!r}: "
                 "step(state, batch, k) needs the global step index"
             )
+        if self.paced:
+            if aux is None:
+                raise TypeError(
+                    f"{self.name} is bound to pacing "
+                    f"{self.pacing.process.name!r}: step(state, batch, k, "
+                    "aux) needs the PacedCarry (see aux_init)"
+                )
+            k = jnp.asarray(k, jnp.int32)
+            new_ev, busy, ev_metrics = self.pacing.advance(aux.events, k)
+            if self.faulty:
+                new_state, metrics, new_inner = self._fault_step(
+                    state, batch, k, aux.inner, extra_straggler=busy
+                )
+            else:
+                new_state, metrics = self._dynamic_step(
+                    state, batch, k, extra_straggler=busy
+                )
+                new_inner = None
+            metrics.update(ev_metrics)
+            return new_state, metrics, PacedCarry(new_ev, new_inner)
         if self.faulty:
             if aux is None:
                 raise TypeError(
@@ -507,15 +572,29 @@ class BoundAlgorithm:
         metrics["alive_nodes"] = jnp.sum(r.alive.astype(jnp.int32))
         return metrics
 
-    def _dynamic_step(self, state: object, batch: object,
-                      k: jax.Array) -> Tuple[object, dict]:
+    def _dynamic_step(self, state: object, batch: object, k: jax.Array,
+                      extra_straggler: Optional[jax.Array] = None,
+                      ) -> Tuple[object, dict]:
         """One step under the bound scenario (fully traceable).
 
         Realizes step k's graph from the folded scenario key, swaps the
         per-step mixer into the context, reverts dropped nodes' state
         bitwise, and charges only realized edges on the wire.
+        ``extra_straggler`` (the pacing layer's busy mask) ORs into the
+        scenario's straggler draw before the weights are built — same
+        sample_masks PRNG discipline, so a no-op mask realizes the same
+        matrix as the plain scenario path.
         """
-        r = scen_mod.realize(self.scenario, self.scen_arrays, k)
+        if extra_straggler is None:
+            r = scen_mod.realize(self.scenario, self.scen_arrays, k)
+        else:
+            edge_up, alive, straggler = scen_mod.sample_masks(
+                self.scenario, self.scen_arrays, k
+            )
+            r = scen_mod.realization_from_masks(
+                self.scen_arrays, edge_up, alive,
+                straggler | extra_straggler,
+            )
         mixer = scen_mod.scenario_mixer(self.scen_arrays, r, self._mixing_mode)
         ctx_t = dataclasses.replace(
             self.ctx, mixer=mixer,
@@ -599,7 +678,8 @@ class BoundAlgorithm:
         return new_state, metrics, temp_mod.TemporalCarry(new_ts, ring)
 
     def _fault_step(self, state: object, batch: object, k: jax.Array,
-                    aux: flt_mod.FaultCarry):
+                    aux: flt_mod.FaultCarry,
+                    extra_straggler: Optional[jax.Array] = None):
         """One step under the bound FaultModel (fully traceable).
 
         Samples the base scenario masks, advances the fault Markov state
@@ -621,6 +701,10 @@ class BoundAlgorithm:
         edge_up, alive, straggler = scen_mod.sample_masks(
             self.scenario, self.scen_arrays, k
         )
+        if extra_straggler is not None:
+            # the pacing layer's busy mask: a backlogged node defers its
+            # exchange exactly like a scenario straggler
+            straggler = straggler | extra_straggler
         new_fs, fr = flt_mod.advance_faults(
             fm, self.scen_arrays, aux.fs, self.fault_key, k,
             edge_up, alive, straggler,
@@ -816,6 +900,7 @@ class BatchedAlgorithm:
         scenario: Optional[AnyScenario] = None,
         scen_arrays: Optional[scen_mod.ScenarioArrays] = None,
         faults: Optional[flt_mod.FaultModel] = None,
+        pacing: Optional[ServePacing] = None,
     ):
         self.spec = spec
         self.ctx0 = ctx0
@@ -825,6 +910,7 @@ class BatchedAlgorithm:
         self.scen_arrays = scen_arrays
         self._mixing_mode = mixing_mode
         self.faults = faults
+        self.pacing = pacing
         c, s = len(self.hps_list), len(self.seeds)
         self.lane_config = np.repeat(np.arange(c), s)       # [L]
         self.lane_seed = np.asarray(self.seeds * c)         # [L]
@@ -856,6 +942,13 @@ class BatchedAlgorithm:
             self._fault_keys = jax.vmap(
                 lambda s: jax.random.fold_in(fk, s)
             )(jnp.asarray(self.lane_seed, jnp.uint32))
+        self._pace_keys = None
+        if pacing is not None:
+            # per-seed request traces (shared across configs)
+            pk = jax.random.PRNGKey(pacing.process.seed)
+            self._pace_keys = jax.vmap(
+                lambda s: jax.random.fold_in(pk, s)
+            )(jnp.asarray(self.lane_seed, jnp.uint32))
 
     # -- grid geometry ------------------------------------------------------
     @property
@@ -879,8 +972,12 @@ class BatchedAlgorithm:
         return self.faults is not None
 
     @property
+    def paced(self) -> bool:
+        return self.pacing is not None
+
+    @property
     def carries_aux(self) -> bool:
-        return self.temporal or self.faulty
+        return self.temporal or self.faulty or self.paced
 
     @property
     def params_of(self) -> Callable:
@@ -892,7 +989,9 @@ class BatchedAlgorithm:
                     fault_key: Optional[jax.Array] = None) -> BoundAlgorithm:
         """Rebuild the single-lane BoundAlgorithm inside the vmapped body:
         traced hp scalars replace the dataclass fields, the lane's slice
-        of the stacked setup extras joins the shared ones."""
+        of the stacked setup extras joins the shared ones.  The pacing
+        spec is shared across lanes — each lane's event stream diverges
+        through the per-lane key carried in its EventState."""
         hps = (dataclasses.replace(self.ctx0.hps, **hp_vals)
                if hp_vals else self.ctx0.hps)
         ctx = dataclasses.replace(
@@ -904,7 +1003,7 @@ class BatchedAlgorithm:
         return BoundAlgorithm(
             self.spec, ctx, scenario=self.scenario,
             scen_arrays=scen_arrays, mixing_mode=self._mixing_mode,
-            faults=self.faults, fault_key=fault_key,
+            faults=self.faults, fault_key=fault_key, pacing=self.pacing,
         )
 
     def init(self, params0: object, m: int,
@@ -921,7 +1020,22 @@ class BatchedAlgorithm:
                               self._lane_extras)
 
     def aux_init(self, state: object) -> object:
-        """Lane-stacked auxiliary carry (FaultCarry or TemporalCarry)."""
+        """Lane-stacked auxiliary carry (FaultCarry, TemporalCarry, or a
+        PacedCarry wrapping per-lane event clocks)."""
+        if self.paced:
+            m = self.scen_arrays.m
+
+            def lane(st, scen_key, fkey, pkey):
+                inner = None
+                if self.faulty:
+                    inner = flt_mod.fault_carry_init(
+                        self.faults, self.scen_arrays._replace(key=scen_key),
+                        self.spec.params_of(st), fkey,
+                    )
+                return PacedCarry(self.pacing.init(m, pkey), inner)
+
+            return jax.vmap(lane)(state, self._scen_keys, self._fault_keys,
+                                  self._pace_keys)
         if self.faulty:
             def lane(st, scen_key, fkey):
                 return flt_mod.fault_carry_init(

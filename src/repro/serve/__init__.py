@@ -1,0 +1,39 @@
+"""Event-driven serve-while-train layer.
+
+Each simulated node interleaves inference traffic with its PaME training
+rounds:
+
+  * :mod:`repro.serve.events` — per-node request arrival processes
+    (Poisson + Markov-modulated bursts) and the :class:`ServePacing`
+    round pacer that lowers to the scan engine's auxiliary carry slot.
+  * :mod:`repro.serve.serving` — :class:`ServeLoop`, batched greedy
+    decode against each node's *current local* model with per-node
+    latency / throughput accounting.
+  * :mod:`repro.serve.membership` — elastic membership: genuinely new
+    nodes join mid-run with checkpoint catch-up and re-derived
+    Metropolis–Hastings weights over the grown node set.
+
+Only the lightweight event layer is imported eagerly; ``serving`` (which
+pulls in the model stack) and ``membership`` are imported on demand.
+"""
+from repro.serve.events import (  # noqa: F401
+    ARRIVAL_PRESETS,
+    ArrivalProcess,
+    EventState,
+    PacedCarry,
+    ServePacing,
+    expand_events,
+    get_arrival,
+    list_arrivals,
+)
+
+__all__ = [
+    "ARRIVAL_PRESETS",
+    "ArrivalProcess",
+    "EventState",
+    "PacedCarry",
+    "ServePacing",
+    "expand_events",
+    "get_arrival",
+    "list_arrivals",
+]

@@ -1,0 +1,238 @@
+"""Request arrival processes and arrival-driven round pacing.
+
+The serving half of the online-DFL scenario: every node fields a stream
+of inference requests while it trains.  Arrivals are sampled per node
+per *training round* from either a plain Poisson process or a
+Markov-modulated Poisson process (MMPP — a hidden per-node burst chain
+switches the rate between ``rate`` and ``burst_rate``), each node serves
+up to ``capacity`` queued requests per round, and a node whose backlog
+exceeds ``defer_threshold`` *defers its gossip exchange* for the round:
+it keeps taking local gradient steps (the paper's straggler semantics —
+self-loop in the realized B^k, mean-preserving by construction) but
+stops answering pull requests until the queue drains.
+
+Everything is traceable: :meth:`ServePacing.advance` is called inside
+the scan-fused engine step, with the :class:`EventState` threaded
+through the engine's auxiliary carry slot (wrapped in
+:class:`PacedCarry` next to the fault carry when both are bound).  The
+per-round draws are counter-mode — ``fold_in(state.key, k)`` — so the
+event clock is deterministic in (seed, step) and independent of the
+training PRNG streams.
+
+Latency accounting is Little's law: ``wait`` accumulates the post-serve
+backlog integral, so ``wait_i / served_i`` is node i's mean request
+sojourn time in rounds — equivalently the mean *staleness of the served
+model*: a request answered w rounds after it arrived is served by a
+model w rounds newer than the one it would have seen at arrival.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ArrivalProcess",
+    "ARRIVAL_PRESETS",
+    "get_arrival",
+    "list_arrivals",
+    "EventState",
+    "PacedCarry",
+    "ServePacing",
+    "expand_events",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Per-node request arrival model, sampled once per training round.
+
+    ``burst_rate == 0`` is a plain Poisson(rate) process; ``burst_rate >
+    0`` turns it into an MMPP: a hidden two-state Markov chain per node
+    (quiet -> burst with ``p_up``, burst -> quiet with ``p_down``) and
+    the round's arrivals drawn Poisson at the state's rate.  All rates
+    are requests / node / round.
+    """
+
+    name: str = "off"
+    rate: float = 0.0        # quiet-state mean arrivals per round
+    burst_rate: float = 0.0  # burst-state rate (0 = plain Poisson)
+    p_up: float = 0.05       # P[quiet -> burst] per round
+    p_down: float = 0.25     # P[burst -> quiet] per round
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.rate < 0.0 or self.burst_rate < 0.0:
+            raise ValueError("arrival rates must be non-negative")
+        for field in ("p_up", "p_down"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field}={v} must be a probability in [0, 1]")
+
+    @property
+    def modulated(self) -> bool:
+        return self.burst_rate > 0.0
+
+    @property
+    def is_static(self) -> bool:
+        """True iff no requests ever arrive (pacing is a no-op)."""
+        return self.rate == 0.0 and self.burst_rate == 0.0
+
+
+ARRIVAL_PRESETS = {
+    "off": ArrivalProcess(name="off"),
+    "quiet": ArrivalProcess(name="quiet", rate=0.5),
+    "steady": ArrivalProcess(name="steady", rate=2.0),
+    "bursty": ArrivalProcess(
+        name="bursty", rate=0.5, burst_rate=8.0, p_up=0.05, p_down=0.25
+    ),
+    "rush": ArrivalProcess(
+        name="rush", rate=4.0, burst_rate=16.0, p_up=0.1, p_down=0.1
+    ),
+}
+
+
+def get_arrival(name: str) -> ArrivalProcess:
+    if name not in ARRIVAL_PRESETS:
+        raise ValueError(
+            f"unknown arrival preset {name!r}; pick from {sorted(ARRIVAL_PRESETS)}"
+        )
+    return ARRIVAL_PRESETS[name]
+
+
+def list_arrivals() -> Tuple[str, ...]:
+    return tuple(ARRIVAL_PRESETS)
+
+
+class EventState(NamedTuple):
+    """Device-side event clock (all leaves scan-carried).
+
+    Cumulative counters (``arrived`` / ``served`` / ``wait``) survive the
+    whole run — and, via :func:`expand_events`, membership growth — so
+    run-level QPS and Little's-law latency read straight off the final
+    state.
+    """
+
+    hi: jax.Array       # [m] bool — MMPP burst-chain state
+    queue: jax.Array    # [m] i32 — backlog after this round's serving
+    arrived: jax.Array  # [m] i32 — cumulative arrivals
+    served: jax.Array   # [m] i32 — cumulative served requests
+    wait: jax.Array     # [m] f32 — backlog integral (Little's law)
+    key: jax.Array      # base PRNG key, folded with the step index
+
+
+class PacedCarry(NamedTuple):
+    """Auxiliary carry of a paced bind: the event clock plus whatever
+    inner carry (the FaultCarry of a fault-injected bind) the step also
+    threads.  ``inner`` is None for pacing-only binds — a pytree leafless
+    node, so the scan carry stays well-formed."""
+
+    events: EventState
+    inner: Optional[object]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePacing:
+    """Arrival-driven gossip pacing for one bound algorithm.
+
+    Per round and node: arrivals ~ process, up to ``capacity`` requests
+    served, and a post-serve backlog above ``defer_threshold`` marks the
+    node *busy* — it defers the round's exchange exactly like a scenario
+    straggler (local update still applied, self-loop in B^k).
+    """
+
+    process: ArrivalProcess = ArrivalProcess()
+    capacity: int = 4         # requests a node can serve per round
+    defer_threshold: int = 8  # backlog beyond which gossip defers
+
+    def __post_init__(self):
+        if self.capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        if self.defer_threshold < 0:
+            raise ValueError("defer_threshold must be >= 0")
+
+    @property
+    def is_static(self) -> bool:
+        """True iff the process never generates load — a static pacing
+        binds the plain unpaced program, bit-identical to ``pacing=None``
+        (same convention as zero-rate scenarios / fault models)."""
+        return self.process.is_static
+
+    def init(self, m: int, key: Optional[jax.Array] = None) -> EventState:
+        """Fresh event clock for m nodes (all queues empty, chains quiet)."""
+        if key is None:
+            key = jax.random.PRNGKey(self.process.seed)
+        return EventState(
+            hi=jnp.zeros((m,), bool),
+            queue=jnp.zeros((m,), jnp.int32),
+            arrived=jnp.zeros((m,), jnp.int32),
+            served=jnp.zeros((m,), jnp.int32),
+            wait=jnp.zeros((m,), jnp.float32),
+            key=key,
+        )
+
+    def advance(
+        self, es: EventState, k: jax.Array
+    ) -> Tuple[EventState, jax.Array, dict]:
+        """One round of the event clock (fully traceable).
+
+        Returns ``(new_state, busy, metrics)`` where ``busy`` is the [m]
+        bool defer mask the training step ORs into its straggler mask,
+        and ``metrics`` are per-round scalars (queue depth, served
+        requests, deferred node count) merged into the step metrics.
+        """
+        proc = self.process
+        m = es.queue.shape[0]
+        kk = jax.random.fold_in(es.key, jnp.asarray(k, jnp.int32))
+        k_mod, k_arr = jax.random.split(kk)
+        hi = es.hi
+        if proc.modulated:
+            u = jax.random.uniform(k_mod, (m,))
+            hi = jnp.where(es.hi, u >= proc.p_down, u < proc.p_up)
+            lam = jnp.where(hi, proc.burst_rate, proc.rate).astype(jnp.float32)
+        else:
+            lam = jnp.full((m,), proc.rate, jnp.float32)
+        arrivals = jax.random.poisson(k_arr, lam, (m,)).astype(jnp.int32)
+        backlog = es.queue + arrivals
+        served_now = jnp.minimum(backlog, jnp.int32(self.capacity))
+        queue = backlog - served_now
+        busy = queue > jnp.int32(self.defer_threshold)
+        new_es = EventState(
+            hi=hi,
+            queue=queue,
+            arrived=es.arrived + arrivals,
+            served=es.served + served_now,
+            wait=es.wait + queue.astype(jnp.float32),
+            key=es.key,
+        )
+        metrics = {
+            "queue_depth": jnp.mean(queue.astype(jnp.float32)),
+            "served_reqs": jnp.sum(served_now).astype(jnp.float32),
+            "deferred_nodes": jnp.sum(busy.astype(jnp.int32)),
+        }
+        return new_es, busy, metrics
+
+
+def expand_events(es: EventState, n_new: int) -> EventState:
+    """Grow the event clock for n_new joining nodes (elastic membership).
+
+    New nodes start quiet with empty queues and zeroed counters; the
+    existing nodes' cumulative accounting carries through the join, so
+    run-level QPS / latency stay correct across membership changes.
+    """
+    if n_new <= 0:
+        return es
+
+    def grow_i32(x):
+        return jnp.concatenate([x, jnp.zeros((n_new,), x.dtype)])
+
+    return EventState(
+        hi=jnp.concatenate([es.hi, jnp.zeros((n_new,), bool)]),
+        queue=grow_i32(es.queue),
+        arrived=grow_i32(es.arrived),
+        served=grow_i32(es.served),
+        wait=grow_i32(es.wait),
+        key=es.key,
+    )

@@ -1,0 +1,200 @@
+"""Elastic membership: genuinely new nodes joining a running DFL system.
+
+The fault layer's crash/rejoin chain (``repro.core.faults``) is a
+*fixed-m* recovery path: a crashed node's state freezes bitwise and the
+node count never changes.  This module implements true joins — the node
+set grows mid-run:
+
+  * :func:`grown_topology` attaches each new node to ``degree`` uniform
+    existing nodes and re-derives the Metropolis–Hastings weights over
+    the grown graph, so the realized mixing matrix stays symmetric ⇒
+    doubly stochastic (mean-preserving) by construction.
+  * :func:`expand_state` grows every node-stacked state leaf with
+    *donor* rows — the new node catches up by cloning a trained
+    neighbor, either from the live state or from a restored checkpoint
+    (``repro.checkpoint.store``).  For a node whose state has not moved
+    since the checkpoint the two paths are bitwise identical (pinned by
+    the conformance suite).
+  * :func:`check_join_faults` is the loud guard against mixing the two
+    recovery paths: crash faults (``FaultModel.crash > 0``) assume
+    fixed-m ``rejoin`` semantics and may not be combined with elastic
+    membership.
+
+PaME's per-node draws stay stable across growth: ``make_topology_arrays``
+draws kappa_i sequentially from ``default_rng(seed)``, so the first
+m_old entries are unchanged when m grows — existing nodes keep their
+communication periods; attach targets' t_i = max(1, floor(nu·|N_i|))
+grow with their realized degree, which is the intended semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults as flt_mod
+from repro.core.topology import (
+    Topology,
+    metropolis_matrix,
+    spectral_gap_zeta,
+)
+
+__all__ = [
+    "JoinEvent",
+    "parse_join_spec",
+    "topology_from_adjacency",
+    "grown_topology",
+    "default_donors",
+    "expand_state",
+    "check_join_faults",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinEvent:
+    """``n_new`` nodes join at global step ``step``, each attaching to
+    ``degree`` uniform existing nodes (drawn from ``seed`` + the current
+    node count, so repeated events draw fresh attachments)."""
+
+    step: int
+    n_new: int
+    degree: int = 2
+
+    def __post_init__(self):
+        if self.step < 0 or self.n_new < 0:
+            raise ValueError("join step and n_new must be non-negative")
+        if self.degree < 1:
+            raise ValueError("join degree must be >= 1")
+
+
+def parse_join_spec(spec: Optional[str], degree: int = 2
+                    ) -> Tuple[JoinEvent, ...]:
+    """Parse ``"STEP:N[:DEGREE]"`` comma-lists (e.g. ``"40:2,80:2"``)."""
+    if not spec:
+        return ()
+    events = []
+    for part in spec.split(","):
+        fields = part.strip().split(":")
+        if len(fields) not in (2, 3):
+            raise ValueError(
+                f"join spec {part!r} is not STEP:N or STEP:N:DEGREE"
+            )
+        events.append(JoinEvent(
+            step=int(fields[0]), n_new=int(fields[1]),
+            degree=int(fields[2]) if len(fields) == 3 else degree,
+        ))
+    return tuple(sorted(events, key=lambda e: e.step))
+
+
+def topology_from_adjacency(a: np.ndarray) -> Topology:
+    """Build a Topology (neighbor sets + Metropolis–Hastings mixing +
+    spectral gap) from an explicit symmetric 0/1 adjacency."""
+    a = np.asarray(a)
+    m = a.shape[0]
+    if a.shape != (m, m) or not np.array_equal(a, a.T):
+        raise ValueError("adjacency must be square and symmetric")
+    if np.any(np.diag(a) != 0):
+        raise ValueError("adjacency must have a zero diagonal")
+    nsets = tuple(
+        tuple(int(j) for j in np.nonzero(a[i])[0]) for i in range(m)
+    )
+    b = metropolis_matrix(a)
+    return Topology(
+        m=m, adjacency=a, neighbor_sets=nsets, mixing=b,
+        zeta=spectral_gap_zeta(b),
+    )
+
+
+def grown_topology(topo: Topology, n_new: int, degree: int = 2,
+                   seed: int = 0) -> Topology:
+    """Grow the graph by n_new nodes, each attached to ``degree`` uniform
+    *existing* nodes (so every new node has a trained donor and the grown
+    graph stays connected whenever the base graph is).
+
+    The attachment draw is seeded on ``(seed, topo.m)`` — successive join
+    events on a growing run draw fresh, reproducible attachments.
+    """
+    if n_new == 0:
+        return topo
+    m_old, m_new = topo.m, topo.m + n_new
+    rng = np.random.default_rng((int(seed), int(topo.m)))
+    a = np.zeros((m_new, m_new), dtype=topo.adjacency.dtype)
+    a[:m_old, :m_old] = topo.adjacency
+    for idx in range(n_new):
+        i = m_old + idx
+        deg = min(degree, m_old)
+        targets = rng.choice(m_old, size=deg, replace=False)
+        a[i, targets] = 1
+        a[targets, i] = 1
+    return topology_from_adjacency(a)
+
+
+def default_donors(topo_new: Topology, m_old: int) -> np.ndarray:
+    """Donor for each new node: its lowest-id neighbor among the old
+    nodes — the node it attached to, whose trained state it clones."""
+    donors = []
+    for i in range(m_old, topo_new.m):
+        olds = [j for j in topo_new.neighbor_sets[i] if j < m_old]
+        if not olds:
+            raise ValueError(f"new node {i} has no old-node neighbor")
+        donors.append(min(olds))
+    return np.asarray(donors, np.int64)
+
+
+def expand_state(state: object, m_old: int, donors: Sequence[int],
+                 source_state: Optional[object] = None) -> object:
+    """Grow every node-stacked leaf of ``state`` by len(donors) rows.
+
+    A leaf is node-stacked iff its leading axis is exactly ``m_old``;
+    scalars (step counters) and unstacked leaves (shared PRNG keys) pass
+    through.  New rows are the donor nodes' rows read from
+    ``source_state`` (default: the live state) — pass a checkpoint-
+    restored state for checkpoint catch-up.  Cloning the donor includes
+    its per-node PRNG/penalty entries: the new node continues the
+    donor's schedule, which is exactly the catch-up semantics.
+
+    Zero joins (empty ``donors``) return ``state`` unchanged — bitwise.
+    """
+    donors = np.asarray(donors, np.int64)
+    if donors.size == 0:
+        return state
+    if np.any(donors < 0) or np.any(donors >= m_old):
+        raise ValueError(f"donors must index old nodes [0, {m_old})")
+    src = state if source_state is None else source_state
+    didx = jnp.asarray(donors)
+
+    def grow(leaf, s_leaf):
+        if not hasattr(leaf, "shape") or getattr(leaf, "ndim", 0) < 1:
+            return leaf
+        if leaf.shape[0] != m_old:
+            return leaf
+        rows = jnp.asarray(s_leaf)[didx]
+        return jnp.concatenate([jnp.asarray(leaf), rows], axis=0)
+
+    return jax.tree_util.tree_map(grow, state, src)
+
+
+def check_join_faults(faults: Optional[flt_mod.FaultModel]) -> None:
+    """Refuse to mix the two recovery paths.
+
+    ``FaultModel.crash``/``rejoin`` is documented for *fixed-m* transient
+    crashes: the crashed node's frozen state IS the local checkpoint it
+    rejoins from, and every fault chain is shaped [m, ...].  Elastic
+    membership changes m mid-run — silently combining the two would
+    rejoin crashed nodes into a graph they were never weighted for.
+    Loss/burst/delay chains are per-link transients and re-initialize
+    cleanly over the grown node set, so they remain allowed.
+    """
+    if faults is not None and faults.crash > 0.0:
+        raise ValueError(
+            "elastic membership (node joins) cannot be combined with crash "
+            f"faults: FaultModel(crash={faults.crash}, rejoin="
+            f"{faults.rejoin}) uses the fixed-m rejoin path (state frozen "
+            "and restored in place), while joins grow m and re-derive the "
+            "mixing weights.  Run crashes via --crash without --join, or "
+            "model churn with Scenario(churn=...) which composes with "
+            "joins."
+        )

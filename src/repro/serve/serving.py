@@ -1,0 +1,153 @@
+"""Batched greedy decode against each node's current local model.
+
+:class:`ServeLoop` is the inference half of serve-while-train: between
+training dispatches it runs prefill + batched greedy decode
+(``models.prefill`` / ``models.decode_step`` — the same kernels as
+``examples/serve_decode.py``) against individual nodes' *current local*
+parameters and records per-node service cost (prefill ms, decode ms,
+tokens/s).  Queueing latency and staleness-of-served-model come from the
+event clock (``repro.serve.events``): this module prices what one
+request costs to serve, the event layer counts how long requests wait.
+
+The decode loop accumulates tokens **on device** and transfers once
+after the final step — a per-step ``np.asarray`` forces a device→host
+sync per token, serializing dispatch and inflating ms/tok (the bug the
+original example shipped with).
+
+The jitted prefill/decode closures are built once per config: per-node
+parameter slices all share one shape, so serving m nodes — or a grown
+node set after a membership join — reuses the same two executables.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, prefill
+
+__all__ = ["decode_greedy", "ServeLoop"]
+
+
+def decode_greedy(
+    dc: Callable,
+    params: object,
+    first_tok: jax.Array,
+    caches: object,
+    prompt_len: int,
+    gen: int,
+    offset: int = 0,
+) -> jax.Array:
+    """Greedy-decode ``gen - 1`` steps after the prefill token.
+
+    ``dc(params, tok, pos, caches) -> (logits, caches)`` is the (jitted)
+    decode step; ``first_tok`` is the argmax of the prefill logits.
+    Returns the [B, gen] token matrix as a device array — tokens are
+    stacked on device, so the only host transfer is the caller's final
+    ``np.asarray`` (after ``block_until_ready`` for honest timing).
+    """
+    tok = first_tok
+    toks: List[jax.Array] = [tok]
+    for i in range(gen - 1):
+        pos = jnp.int32(prompt_len + offset + i)
+        logits, caches = dc(params, tok, pos, caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)
+
+
+class ServeLoop:
+    """Per-node batched greedy decode with service-cost accounting.
+
+    One instance per model config: builds the jitted prefill/decode
+    closures once and serves any node's parameter slice through them.
+    Prompts are drawn from a private ``default_rng(seed)`` stream —
+    independent of every training PRNG.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        prompt_len: int = 16,
+        gen: int = 8,
+        batch: int = 2,
+        seed: int = 0,
+    ):
+        if gen < 2:
+            raise ValueError("gen must be >= 2 (prefill token + decode)")
+        self.cfg = cfg
+        self.prompt_len = int(prompt_len)
+        self.gen = int(gen)
+        self.batch = int(batch)
+        self.offset = cfg.n_patches if cfg.arch_type == "vlm" else 0
+        self.capacity = self.prompt_len + self.gen + self.offset
+        self._pf = jax.jit(lambda p, b: prefill(p, cfg, b, self.capacity))
+        self._dc = jax.jit(
+            lambda p, t, pos, c: decode_step(p, cfg, t, pos, c)
+        )
+        self._rng = np.random.default_rng(seed)
+
+    def make_batch(self) -> dict:
+        prompts = jnp.asarray(
+            self._rng.integers(
+                0, self.cfg.vocab, (self.batch, self.prompt_len)
+            ),
+            jnp.int32,
+        )
+        batch = {"tokens": prompts}
+        if self.cfg.arch_type == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (self.batch, self.cfg.n_patches, self.cfg.vision_dim),
+                jnp.dtype(self.cfg.dtype),
+            )
+        return batch
+
+    def serve_node(self, params_node: object) -> Dict[str, float]:
+        """One decode batch against a single node's parameters.
+
+        Returns service-cost stats: prefill/decode wall-clock and the
+        decode throughput in tokens/s (batch × decode steps / wall).
+        """
+        batch = self.make_batch()
+        t0 = time.perf_counter()
+        logits, caches = self._pf(params_node, batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_prefill = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = decode_greedy(
+            self._dc, params_node, tok, caches,
+            self.prompt_len, self.gen, self.offset,
+        )
+        out = np.asarray(jax.block_until_ready(out))
+        t_decode = time.perf_counter() - t0
+        n_decoded = self.batch * (self.gen - 1)
+        return {
+            "prefill_ms": t_prefill * 1e3,
+            "decode_ms": t_decode * 1e3,
+            "tokens_per_s": n_decoded / max(t_decode, 1e-9),
+            "tokens": out,
+        }
+
+    def serve_round(
+        self,
+        params_stacked: object,
+        node_ids: Optional[Sequence[int]] = None,
+    ) -> Dict[int, Dict[str, float]]:
+        """Serve one decode batch on each requested node's local model.
+
+        ``params_stacked`` is the node-stacked parameter pytree ([m, ...]
+        leaves); per-node slices share one shape, so every node reuses
+        the same compiled executables.
+        """
+        if node_ids is None:
+            leaves = jax.tree_util.tree_leaves(params_stacked)
+            node_ids = range(leaves[0].shape[0])
+        stats = {}
+        for i in node_ids:
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params_stacked)
+            stats[int(i)] = self.serve_node(p_i)
+        return stats

@@ -1,0 +1,206 @@
+"""Elastic-membership conformance: joins stay doubly stochastic and
+mean-preserving, zero joins are bitwise no-ops, and checkpoint catch-up
+equals live catch-up for a frozen donor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.algorithms import PaMEHp, get_algorithm
+from repro.core.faults import FaultModel
+from repro.core.pame import make_topology_arrays
+from repro.core.scenarios import (
+    Scenario,
+    make_scenario_arrays,
+    realization_matrix,
+    realize,
+)
+from repro.core.topology import build_topology
+from repro.serve import membership as mb
+
+M_OLD = 8
+
+
+def _grown(n_new=4, degree=2, seed=0):
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    return topo, mb.grown_topology(topo, n_new, degree=degree, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Topology growth invariants
+# ---------------------------------------------------------------------------
+def test_grown_mixing_doubly_stochastic():
+    _, g = _grown()
+    assert g.m == M_OLD + 4
+    np.testing.assert_allclose(g.mixing.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(g.mixing.sum(axis=0), 1.0, atol=1e-12)
+    assert np.array_equal(g.mixing, g.mixing.T)
+
+
+def test_grown_preserves_old_graph_and_mean():
+    topo, g = _grown()
+    assert np.array_equal(g.adjacency[:M_OLD, :M_OLD], topo.adjacency)
+    x = np.random.default_rng(0).standard_normal((g.m, 7))
+    np.testing.assert_allclose((g.mixing @ x).mean(axis=0), x.mean(axis=0),
+                               atol=1e-12)
+
+
+def test_realized_matrix_across_join_doubly_stochastic():
+    """The in-scan realization over the GROWN node set keeps the paper's
+    doubly-stochasticity / mean-preservation invariants — with dynamics."""
+    _, g = _grown()
+    scen = Scenario(name="harsh", edge_drop=0.2, straggler=0.3, seed=1)
+    arrays = make_scenario_arrays(g, scen)
+    for k in range(5):
+        r = realize(scen, arrays, jnp.int32(k))
+        w = np.asarray(realization_matrix(arrays, r))
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-5)
+        x = np.random.default_rng(k).standard_normal((g.m, 3))
+        np.testing.assert_allclose((w @ x).mean(axis=0), x.mean(axis=0),
+                                   atol=1e-5)
+
+
+def test_new_nodes_attach_to_old_nodes_only():
+    _, g = _grown(n_new=4, degree=3)
+    for i in range(M_OLD, g.m):
+        assert all(j < M_OLD for j in g.neighbor_sets[i])
+        assert len(g.neighbor_sets[i]) == 3
+
+
+def test_zero_join_topology_is_same_object():
+    topo = build_topology("ring", M_OLD)
+    assert mb.grown_topology(topo, 0) is topo
+
+
+def test_kappa_stable_for_incumbent_nodes():
+    """PaME's per-node kappa draws are sequential, so incumbents keep
+    their communication periods across a join."""
+    topo, g = _grown()
+    cfg = PaMEHp(kappa_lo=3, kappa_hi=7)
+    old = np.asarray(make_topology_arrays(topo, cfg, seed=5).kappa)
+    new = np.asarray(make_topology_arrays(g, cfg, seed=5).kappa)
+    np.testing.assert_array_equal(new[:M_OLD], old)
+
+
+def test_join_spec_parsing():
+    evs = mb.parse_join_spec("40:2,20:1:3", degree=2)
+    assert evs == (mb.JoinEvent(20, 1, 3), mb.JoinEvent(40, 2, 2))
+    assert mb.parse_join_spec(None) == ()
+    assert mb.parse_join_spec("") == ()
+    with pytest.raises(ValueError):
+        mb.parse_join_spec("40")
+    with pytest.raises(ValueError):
+        mb.JoinEvent(step=1, n_new=1, degree=0)
+
+
+def test_topology_from_adjacency_validates():
+    a = np.zeros((3, 3), np.int64)
+    a[0, 1] = 1  # asymmetric
+    with pytest.raises(ValueError):
+        mb.topology_from_adjacency(a)
+
+
+# ---------------------------------------------------------------------------
+# State expansion
+# ---------------------------------------------------------------------------
+def _trained_state(steps=6):
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((M_OLD, 4, 5)).astype(np.float32)
+    y = rng.standard_normal((M_OLD, 4)).astype(np.float32)
+
+    def grad_fn(p, b, k):
+        Ab, yb = b
+        r = Ab @ p - yb
+        return 0.5 * jnp.mean(r * r), Ab.T @ r / r.shape[0]
+
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    bound = get_algorithm("pame").bind(grad_fn, topo,
+                                       PaMEHp(nu=0.5, p=0.5))
+    batch = (jnp.asarray(A), jnp.asarray(y))
+    state, _ = bound.run(jax.random.PRNGKey(1), np.zeros(5, np.float32),
+                         M_OLD, lambda k: batch, steps)
+    return state
+
+
+def test_expand_state_zero_joins_bitwise_noop():
+    state = _trained_state()
+    out = mb.expand_state(state, M_OLD, [])
+    assert out is state  # not even a copy
+
+
+def test_expand_state_clones_donors():
+    state = _trained_state()
+    donors = np.array([2, 0, 5])
+    grown = mb.expand_state(state, M_OLD, donors)
+    p_old = np.asarray(state.params)
+    p_new = np.asarray(grown.params)
+    assert p_new.shape[0] == M_OLD + 3
+    np.testing.assert_array_equal(p_new[:M_OLD], p_old)
+    np.testing.assert_array_equal(p_new[M_OLD:], p_old[donors])
+    # per-node sigma rows clone too; scalar step counter passes through
+    np.testing.assert_array_equal(np.asarray(grown.sigma)[M_OLD:],
+                                  np.asarray(state.sigma)[donors])
+    assert np.asarray(grown.step) == np.asarray(state.step)
+
+
+def test_expand_state_validates_donors():
+    state = _trained_state()
+    with pytest.raises(ValueError):
+        mb.expand_state(state, M_OLD, [M_OLD])
+
+
+def test_checkpoint_catchup_equals_live_for_frozen_state(tmp_path):
+    """A donor whose state has not moved since the save: catch-up from
+    the checkpoint is bitwise identical to catch-up from live state."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    state = _trained_state()
+    save_checkpoint(str(tmp_path), 6, {"state": state})
+    restored = restore_checkpoint(str(tmp_path), {"state": state}, 6)["state"]
+    donors = np.array([1, 4])
+    via_live = mb.expand_state(state, M_OLD, donors)
+    via_ckpt = mb.expand_state(state, M_OLD, donors, source_state=restored)
+    for a, b in zip(jax.tree_util.tree_leaves(via_live),
+                    jax.tree_util.tree_leaves(via_ckpt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grown_state_trains_under_grown_topology():
+    """End-to-end: expand a trained state over the grown graph and keep
+    training — losses stay finite, incumbents keep learning."""
+    state = _trained_state()
+    topo, g = _grown()
+    donors = mb.default_donors(g, M_OLD)
+    grown = mb.expand_state(state, M_OLD, donors)
+
+    rng = np.random.default_rng(1)
+    A = rng.standard_normal((g.m, 4, 5)).astype(np.float32)
+    y = rng.standard_normal((g.m, 4)).astype(np.float32)
+
+    def grad_fn(p, b, k):
+        Ab, yb = b
+        r = Ab @ p - yb
+        return 0.5 * jnp.mean(r * r), Ab.T @ r / r.shape[0]
+
+    bound = get_algorithm("pame").bind(grad_fn, g, PaMEHp(nu=0.5, p=0.5))
+    batch = (jnp.asarray(A), jnp.asarray(y))
+    new_state, hist = B.run_algorithm(
+        bound.step, grown, lambda k: batch, 5,
+        params_of=bound.params_of)
+    assert np.all(np.isfinite(hist["loss"]))
+    assert np.asarray(bound.params_of(new_state)).shape[0] == g.m
+
+
+# ---------------------------------------------------------------------------
+# Fault / membership separation
+# ---------------------------------------------------------------------------
+def test_crash_faults_refused_with_joins():
+    with pytest.raises(ValueError, match="fixed-m"):
+        mb.check_join_faults(FaultModel(name="c", crash=0.02, rejoin=0.2))
+
+
+def test_non_crash_faults_allowed_with_joins():
+    mb.check_join_faults(None)
+    mb.check_join_faults(FaultModel(name="l", loss=0.2))

@@ -1,0 +1,239 @@
+"""Serve-while-train event layer: arrival processes, round pacing, and
+the paced bind's equivalence guarantees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import DPSGDHp, PaMEHp, get_algorithm
+from repro.core.faults import FaultModel
+from repro.core.scenarios import Scenario
+from repro.core.temporal import TemporalScenario
+from repro.core.topology import build_topology
+from repro.serve.events import (
+    ARRIVAL_PRESETS,
+    ArrivalProcess,
+    PacedCarry,
+    ServePacing,
+    expand_events,
+    get_arrival,
+)
+
+M, N = 8, 5
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((M, 4, N)).astype(np.float32)
+    y = rng.standard_normal((M, 4)).astype(np.float32)
+
+    def grad_fn(p, b, k):
+        Ab, yb = b
+        r = Ab @ p - yb
+        return 0.5 * jnp.mean(r * r), Ab.T @ r / r.shape[0]
+
+    batch = (jnp.asarray(A), jnp.asarray(y))
+    return grad_fn, (lambda k: batch), np.zeros(N, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes
+# ---------------------------------------------------------------------------
+def test_arrival_presets_resolve():
+    for name in ARRIVAL_PRESETS:
+        proc = get_arrival(name)
+        assert proc.name == name
+    with pytest.raises(ValueError):
+        get_arrival("nope")
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        ArrivalProcess(rate=-1.0)
+    with pytest.raises(ValueError):
+        ArrivalProcess(p_up=1.5)
+    with pytest.raises(ValueError):
+        ServePacing(capacity=-1)
+
+
+def test_event_clock_deterministic():
+    pac = ServePacing(ArrivalProcess(name="b", rate=1.0, burst_rate=6.0),
+                      capacity=2, defer_threshold=3)
+    runs = []
+    for _ in range(2):
+        es = pac.init(M)
+        trace = []
+        for k in range(20):
+            es, busy, _ = pac.advance(es, jnp.int32(k))
+            trace.append(np.asarray(es.queue))
+        runs.append(np.stack(trace))
+    np.testing.assert_array_equal(runs[0], runs[1])
+
+
+def test_poisson_rate_matches():
+    """Mean arrivals per node per round ~ the configured rate."""
+    rate = 2.0
+    pac = ServePacing(ArrivalProcess(rate=rate), capacity=100,
+                      defer_threshold=1000)
+    es = pac.init(M)
+    steps = 300
+    for k in range(steps):
+        es, _, _ = pac.advance(es, jnp.int32(k))
+    mean = float(np.asarray(es.arrived).sum()) / (M * steps)
+    assert abs(mean - rate) < 0.25
+
+
+def test_littles_law_accounting():
+    """wait/served is the mean sojourn: in an always-served system the
+    queue never holds, so latency is 0; with capacity 0 nothing is ever
+    served and wait grows."""
+    pac = ServePacing(ArrivalProcess(rate=1.0), capacity=100,
+                      defer_threshold=5)
+    es = pac.init(M)
+    for k in range(50):
+        es, _, _ = pac.advance(es, jnp.int32(k))
+    assert float(np.asarray(es.wait).sum()) == 0.0
+    assert np.array_equal(np.asarray(es.served), np.asarray(es.arrived))
+
+    starved = ServePacing(ArrivalProcess(rate=1.0), capacity=0,
+                          defer_threshold=5)
+    es = starved.init(M)
+    for k in range(50):
+        es, _, _ = starved.advance(es, jnp.int32(k))
+    assert int(np.asarray(es.served).sum()) == 0
+    assert float(np.asarray(es.wait).sum()) > 0.0
+
+
+def test_expand_events_preserves_counters():
+    pac = ServePacing(ArrivalProcess(rate=2.0), capacity=1,
+                      defer_threshold=2)
+    es = pac.init(M)
+    for k in range(10):
+        es, _, _ = pac.advance(es, jnp.int32(k))
+    grown = expand_events(es, 3)
+    assert grown.queue.shape == (M + 3,)
+    np.testing.assert_array_equal(np.asarray(grown.arrived)[:M],
+                                  np.asarray(es.arrived))
+    assert int(np.asarray(grown.arrived)[M:].sum()) == 0
+    assert expand_events(es, 0) is es
+
+
+# ---------------------------------------------------------------------------
+# Paced binds
+# ---------------------------------------------------------------------------
+def test_zero_rate_pacing_binds_unpaced_program():
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    alg = get_algorithm("dpsgd")
+    b0 = alg.bind(grad_fn, topo, DPSGDHp(lr=0.1),
+                  pacing=ServePacing(ArrivalProcess()))
+    assert not b0.paced and not b0.dynamic and not b0.carries_aux
+    key = jax.random.PRNGKey(1)
+    s0, _ = b0.run(key, p0, M, batch_fn, 20)
+    su, _ = alg.bind(grad_fn, topo, DPSGDHp(lr=0.1)).run(
+        key, p0, M, batch_fn, 20)
+    np.testing.assert_array_equal(np.asarray(s0.params),
+                                  np.asarray(su.params))
+
+
+def test_always_busy_equals_full_straggler():
+    """A node that defers for load is EXACTLY a paper straggler: the
+    flooded paced run (every node always over threshold) reproduces the
+    straggler=1.0 scenario bitwise."""
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    alg = get_algorithm("dpsgd")
+    key = jax.random.PRNGKey(1)
+    flooded = ServePacing(ArrivalProcess(name="flood", rate=50.0),
+                          capacity=1, defer_threshold=0)
+    sp, hp = alg.bind(grad_fn, topo, DPSGDHp(lr=0.1), pacing=flooded).run(
+        key, p0, M, batch_fn, 15)
+    ss, _ = alg.bind(grad_fn, topo, DPSGDHp(lr=0.1),
+                     scenario=Scenario(name="s", straggler=1.0)).run(
+        key, p0, M, batch_fn, 15)
+    np.testing.assert_array_equal(np.asarray(sp.params),
+                                  np.asarray(ss.params))
+    assert hp["deferred_nodes"][-1] == M
+
+
+def test_paced_run_emits_event_metrics():
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    pac = ServePacing(ArrivalProcess(name="bursty", rate=0.5,
+                                     burst_rate=8.0),
+                      capacity=2, defer_threshold=4)
+    bound = get_algorithm("pame").bind(
+        grad_fn, topo, PaMEHp(nu=0.5, p=0.5), pacing=pac)
+    assert bound.paced and bound.carries_aux
+    state, hist = bound.run(jax.random.PRNGKey(0), p0, M, batch_fn, 25)
+    for key in ("queue_depth", "served_reqs", "deferred_nodes"):
+        assert key in hist and len(hist[key]) == 25
+    assert all(0 <= d <= M for d in hist["deferred_nodes"])
+
+
+def test_paced_composes_with_faults():
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    pac = ServePacing(ArrivalProcess(rate=3.0), capacity=1,
+                      defer_threshold=2)
+    bound = get_algorithm("dpsgd").bind(
+        grad_fn, topo, DPSGDHp(lr=0.1), pacing=pac,
+        faults=FaultModel(name="l", loss=0.3))
+    assert bound.paced and bound.faulty
+    state, hist = bound.run(jax.random.PRNGKey(0), p0, M, batch_fn, 15)
+    assert "dropped_msgs" in hist and "deferred_nodes" in hist
+    assert np.all(np.isfinite(hist["loss"]))
+
+
+def test_paced_rejects_temporal():
+    grad_fn, _, _ = _problem()
+    topo = build_topology("ring", M)
+    pac = ServePacing(ArrivalProcess(rate=1.0))
+    with pytest.raises(NotImplementedError):
+        get_algorithm("dpsgd").bind(
+            grad_fn, topo, DPSGDHp(),
+            scenario=TemporalScenario(name="t", burst_down=0.1),
+            pacing=pac)
+
+
+def test_paced_aux_is_paced_carry():
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    pac = ServePacing(ArrivalProcess(rate=1.0), capacity=1)
+    bound = get_algorithm("dpsgd").bind(grad_fn, topo, DPSGDHp(lr=0.1),
+                                        pacing=pac)
+    from repro.core import baselines as B
+    state = bound.init(jax.random.PRNGKey(0),
+                       B.stack_params(p0, M))
+    aux = bound.aux_init(state)
+    assert isinstance(aux, PacedCarry)
+    assert aux.inner is None
+    assert aux.events.queue.shape == (M,)
+
+
+def test_batched_paced_lanes_match_unbatched():
+    """Lane (s, c) of a paced bind_batched reproduces the unbatched
+    paced bind for that seed to fp tolerance."""
+    grad_fn, batch_fn, p0 = _problem()
+    topo = build_topology("ring", M)
+    alg = get_algorithm("dpsgd")
+    pac = ServePacing(ArrivalProcess(name="bursty", rate=0.5,
+                                     burst_rate=6.0),
+                      capacity=2, defer_threshold=3)
+    bb = alg.bind_batched(grad_fn, topo, [DPSGDHp(lr=0.1)],
+                          seeds=[0, 1], pacing=pac)
+    assert bb.paced and bb.lanes == 2
+    stb, hb = bb.run(p0, M, batch_fn, 12)
+    for lane, seed in enumerate([0, 1]):
+        # unbatched: same per-lane pace key (fold_in of the lane seed)
+        pace_key = jax.random.fold_in(
+            jax.random.PRNGKey(pac.process.seed), np.uint32(seed))
+        bu = alg.bind(grad_fn, topo, DPSGDHp(lr=0.1), pacing=pac)
+        bu.pace_key = pace_key
+        su, hu = bu.run(jax.random.PRNGKey(seed), p0, M, batch_fn, 12)
+        np.testing.assert_allclose(
+            np.asarray(stb.params)[lane], np.asarray(su.params),
+            rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(hb["deferred_nodes"])[:, lane],
+            hu["deferred_nodes"])
