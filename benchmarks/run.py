@@ -30,6 +30,9 @@ Figure map:
                                          roofline terms; emits BENCH_gossip.json)
   bench_scenarios          —            (dynamic networks: churn x topology race
                                          with realized per-step wire bits)
+  bench_chaos              —            (network split + heal: post-heal
+                                         consensus recovery, PaME vs surrogate-
+                                         memory baselines; emits BENCH_chaos.json)
   bench_heterogeneity      Figs 11-12   (label-skew CNN / Dirichlet ResNet-20)
   bench_comm_volume        Eq. (8)      (bit accounting, 64/16/8-bit wires)
   bench_kernels            —            (Pallas kernels, interpret-mode checks)
@@ -1509,6 +1512,172 @@ def bench_serving(quick=False):
     RESULTS["serving"] = table
 
 
+def bench_chaos(quick=False):
+    """Partition-tolerance race: a scheduled network split opens at
+    steps//4 (the realization turns block-doubly-stochastic — zero
+    cross-component mass, Assumption 1 intact within each side) and
+    heals at steps//2; 5% message loss runs throughout so the
+    surrogate-memory baselines (CHOCO/BEER/ANQ-NIDS) race their
+    per-receiver replica variants.  During the split each side converges
+    internally while the component means drift apart; at heal that drift
+    becomes global disagreement and the race is who reconciles it.
+    PaME's count-normalized averaging is memoryless — the merged rounds
+    mix correctly immediately — while the surrogates re-enter with
+    replicas desynced across the cut.
+
+    Each algorithm runs TWICE with identical faults/seeds: once with the
+    partition window and once without (the no-split reference).  The
+    headline is the *residual damage ratio* — final-state disagreement
+    split / no-split — which isolates the lasting scar the partition
+    leaves after the algorithm's own convergence behaviour is divided
+    out (PaME ≈ 1.0: memoryless, no scar).  The *merge spike* (peak
+    disagreement in the 10 steps after heal over the pre-heal level)
+    shows the transient a desynced surrogate memory injects at
+    reconnection.  Emits BENCH_chaos.json and the EXPERIMENTS.md
+    block."""
+    from repro.core import algorithms as ALG
+    from repro.core.faults import FaultModel
+    from repro.core.scenarios import PartitionWindow, Scenario
+
+    m, n = 16, 300
+    steps = 80 if quick else 200
+    start, heal = steps // 4, steps // 2
+    seeds = list(range(SWEEP_SEEDS))
+    topo = build_topology("erdos_renyi", m, p=0.4, seed=0)
+    batch, grad_fn, objective, accuracy = logreg_problem(m, n, spn=64, seed=0)
+    chunk = chunk_for(steps)
+    scen = Scenario(
+        name="split", seed=0,
+        partitions=(PartitionWindow(start=start, heal=heal, n_parts=2,
+                                    seed=1),),
+    )
+    fm_model = FaultModel(loss=0.05, seed=0)
+    race_hps = {
+        "pame": PaMEConfig(nu=0.2, p=0.2, gamma=1.002, sigma0=1.0,
+                           kappa_lo=3, kappa_hi=7),
+        "choco": ALG.ChocoHp(lr=0.05, gossip_gamma=0.3, comp_frac=0.3),
+        "beer": ALG.BeerHp(lr=0.05, gossip_gamma=0.4, comp_frac=0.2),
+        "anq_nids": ALG.AnqNidsHp(lr=0.1, qsgd_levels=16),
+    }
+    def final_disagreement(ba, state):
+        # batched leaves are [lanes, m, ...]: per-lane mean over the m
+        # nodes of the squared distance to the lane's node-mean params
+        w = np.asarray(ba.params_of(state), np.float64)  # [L, m, n]
+        dev = w - w.mean(axis=1, keepdims=True)
+        return float(np.mean(np.mean(np.sum(dev * dev, axis=-1), axis=1)))
+
+    table = {}
+    curves = {}
+    md_rows = []
+    for name, hp in race_hps.items():
+        run = {}
+        for variant, variant_scen in (("split", scen), ("nosplit", None)):
+            ba = ALG.get_algorithm(name).bind_batched(
+                grad_fn, topo, [hp], seeds=seeds,
+                mixing="sparse", scenario=variant_scen, faults=fm_model,
+            )
+            runner = ba.make_runner(
+                objective_fn=objective, tol_std=0.0, chunk_size=chunk
+            )
+            t0 = time.perf_counter()
+            state, hist = runner(jnp.zeros(n), m, lambda k: batch, steps)
+            wall = time.perf_counter() - t0
+            mean_w = np.asarray(
+                jax.tree_util.tree_map(
+                    lambda x: x.mean(axis=1), ba.params_of(state)
+                )
+            )
+            accs = [
+                accuracy(jnp.asarray(mean_w[l])) for l in range(ba.lanes)
+            ]
+            am, a_s = mean_std(accs)
+            run[variant] = {
+                "disagreement": final_disagreement(ba, state),
+                "accuracy": am, "accuracy_std": a_s,
+                "hist": hist, "wall": wall, "lanes": ba.lanes,
+            }
+        # [steps, lanes]: per-component consensus defect; outside the
+        # window the single global component makes it plain disagreement
+        hist = run["split"]["hist"]
+        cc = np.asarray(hist["comp_consensus"]).mean(axis=1)
+        gap = np.asarray(hist["comp_mean_gap"]).mean(axis=1)
+        drift_at_heal = float(gap[heal - 1])     # cross-component drift
+        pre_heal = float(cc[heal - 1])           # within-component level
+        merge_spike = float(cc[heal:heal + 10].max()) / max(pre_heal, 1e-12)
+        residual = run["split"]["disagreement"] / max(
+            run["nosplit"]["disagreement"], 1e-12
+        )
+        acc_cost = run["nosplit"]["accuracy"] - run["split"]["accuracy"]
+        table[name] = {
+            "drift_at_heal": drift_at_heal,
+            "pre_heal_disagreement": pre_heal,
+            "merge_spike": merge_spike,
+            "disagreement_split": run["split"]["disagreement"],
+            "disagreement_nosplit": run["nosplit"]["disagreement"],
+            "residual_damage": residual,
+            "accuracy_split": run["split"]["accuracy"],
+            "accuracy_nosplit": run["nosplit"]["accuracy"],
+            "accuracy_cost": acc_cost,
+            "seeds": len(seeds),
+        }
+        curves[name] = {"comp_consensus": cc.tolist(),
+                        "comp_mean_gap": gap.tolist()}
+        csv_row(
+            f"chaos/{name}",
+            run["split"]["wall"]
+            / max(int(hist["steps_dispatched"]) * run["split"]["lanes"], 1)
+            * 1e6,
+            f"residual={residual:.4f};spike={merge_spike:.2f}x;"
+            f"drift@heal={drift_at_heal:.4f};acc_cost={acc_cost:+.4f}",
+        )
+        md_rows.append((
+            name, f"{drift_at_heal:.4f}", f"{merge_spike:.2f}×",
+            f"{run['split']['disagreement']:.4f}",
+            f"{run['nosplit']['disagreement']:.4f}",
+            f"{residual:.3f}", f"{acc_cost:+.4f}",
+        ))
+    # headline: the partition's lasting scar, PaME vs each surrogate
+    for name in race_hps:
+        if name == "pame":
+            continue
+        margin = table[name]["residual_damage"] - table["pame"]["residual_damage"]
+        csv_row(f"chaos/residual_damage_vs_{name}", 0.0,
+                f"{name}_minus_pame={margin:+.4f};"
+                f"spike_ratio={table[name]['merge_spike'] / max(table['pame']['merge_spike'], 1e-12):.1f}x")
+    payload = {"config": {"m": m, "n": n, "steps": steps, "start": start,
+                          "heal": heal, "loss": fm_model.loss,
+                          "seeds": len(seeds)},
+               "table": table, "curves": curves}
+    with open(os.path.join(ART, "BENCH_chaos.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+    print(f"# wrote {os.path.join(ART, 'BENCH_chaos.json')}")
+    _update_experiments_md(
+        "chaos",
+        "## Partition tolerance: post-heal consensus recovery\n\n"
+        f"Example 2 logistic regression (m={m}, n={n}), erdos_renyi(p=0.4), "
+        f"{steps} steps.  The graph splits into 2 components over steps "
+        f"[{start}, {heal}) — the realized matrix is block-doubly-"
+        "stochastic per component (zero cross mass) — then heals; 5% "
+        "message loss runs throughout, so CHOCO/BEER/ANQ-NIDS race their "
+        "per-receiver surrogate replicas.  Every algorithm also runs a "
+        "*no-split* reference with identical faults and seeds; the "
+        "**residual damage** column is final-state disagreement "
+        "split/no-split (1.0 = the partition left no lasting scar), and "
+        "**merge spike** is the peak disagreement in the 10 steps after "
+        "heal over the pre-heal level (the transient a desynced "
+        "surrogate memory injects at reconnection).  PaME's "
+        "count-normalized averaging is memoryless, so both stay near "
+        f"1.  Mean over {len(seeds)} batched seed lanes "
+        "(`bind_batched(scenario=..., faults=...)`).\n\n"
+        + _fmt_md_table(
+            ("algo", "drift@heal", "merge spike", "final dis. (split)",
+             "final dis. (no split)", "residual damage", "acc cost"),
+            md_rows,
+        ),
+    )
+    RESULTS["chaos"] = table
+
+
 BENCHES = {
     "transmission_rate": bench_transmission_rate,
     "participation": bench_participation,
@@ -1521,6 +1690,7 @@ BENCHES = {
     "gossip": bench_gossip,
     "scenarios": bench_scenarios,
     "serving": bench_serving,
+    "chaos": bench_chaos,
     "heterogeneity": bench_heterogeneity,
     "comm_volume": bench_comm_volume,
     "kernels": bench_kernels,

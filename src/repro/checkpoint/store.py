@@ -7,20 +7,28 @@ serialization, dtype/shape/CRC validation on restore with a dedicated
 `keep` garbage collection.  Fault-injected training leans on this store:
 a crash/rejoin run's state (and auxiliary fault carry) must restore
 exactly, so every leaf carries a crc32 checksum in the manifest.
+
+Restoring without an explicit ``step`` walks a *fallback chain*: the
+newest step is tried first and, if it turns out corrupt (truncated leaf,
+crc mismatch, mangled manifest), the next-older intact checkpoint is
+restored instead — a crash mid-rot never strands a chaos run on garbage
+when an older good step survives.  Only when every step is corrupt does
+the newest step's error propagate.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import sys
 import zlib
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import numpy as np
 
 __all__ = [
-    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "save_checkpoint", "restore_checkpoint", "latest_step", "list_steps",
     "CheckpointCorruptError",
 ]
 
@@ -91,15 +99,20 @@ def _gc(directory: str, keep: int) -> None:
         shutil.rmtree(os.path.join(directory, d))
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str) -> List[int]:
+    """All published checkpoint steps under ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(directory)
         if d.startswith("step_") and not d.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
@@ -110,11 +123,30 @@ def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
     :class:`CheckpointCorruptError` naming the offending file.  Manifests
     written before checksumming (no ``crc32`` key) still restore — the
     check is simply skipped for those leaves.
+
+    With ``step=None`` the steps are tried newest-first and the first
+    *intact* one wins (corrupt steps are skipped with a stderr note);
+    the newest step's error propagates only when every step is corrupt,
+    so single-checkpoint callers see the same exception they always did.
+    An explicit ``step`` never falls back.
     """
     if step is None:
-        step = latest_step(directory)
-        if step is None:
+        steps = list_steps(directory)
+        if not steps:
             raise FileNotFoundError(f"no checkpoints under {directory}")
+        newest_err: Optional[CheckpointCorruptError] = None
+        for s in reversed(steps):
+            try:
+                return restore_checkpoint(directory, tree_like, s)
+            except CheckpointCorruptError as e:
+                if newest_err is None:
+                    newest_err = e
+                print(
+                    f"[checkpoint] step {s} is corrupt ({e}); falling "
+                    "back to the next-older checkpoint",
+                    file=sys.stderr, flush=True,
+                )
+        raise newest_err
     step_dir = os.path.join(directory, f"step_{step:09d}")
     manifest_path = os.path.join(step_dir, "manifest.json")
     if not os.path.isdir(step_dir):

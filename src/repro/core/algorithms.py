@@ -572,6 +572,28 @@ class BoundAlgorithm:
         metrics["alive_nodes"] = jnp.sum(r.alive.astype(jnp.int32))
         return metrics
 
+    def _partition_metrics(self, k: jax.Array, new_state: object,
+                           metrics: dict) -> dict:
+        """Per-component consensus / mean-drift scalars when the bound
+        scenario schedules partition windows: within-component
+        disagreement (``comp_consensus``) and the between-component mean
+        gap (``comp_mean_gap``) whose post-heal decay is the recovery
+        headline.  A partition-free scenario adds nothing — the traced
+        program is unchanged."""
+        scen = self.scenario
+        if not getattr(scen, "partitions", ()):
+            return metrics
+        comp = scen_mod.active_components(self.scen_arrays, k)
+        x = jnp.concatenate([
+            jnp.reshape(leaf, (leaf.shape[0], -1)).astype(jnp.float32)
+            for leaf in jax.tree_util.tree_leaves(
+                self.spec.params_of(new_state))
+        ], axis=1)
+        cc, gap = scen_mod.component_stats(comp, x, scen.max_parts)
+        metrics["comp_consensus"] = cc
+        metrics["comp_mean_gap"] = gap
+        return metrics
+
     def _dynamic_step(self, state: object, batch: object, k: jax.Array,
                       extra_straggler: Optional[jax.Array] = None,
                       ) -> Tuple[object, dict]:
@@ -602,7 +624,8 @@ class BoundAlgorithm:
         )
         new_state, metrics = self.spec.step(state, batch, ctx_t)
         new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
-        return new_state, self._realized_metrics(r, state, metrics)
+        metrics = self._realized_metrics(r, state, metrics)
+        return new_state, self._partition_metrics(k, new_state, metrics)
 
     def _temporal_step(self, state: object, batch: object, k: jax.Array,
                        aux: temp_mod.TemporalCarry):
@@ -762,6 +785,7 @@ class BoundAlgorithm:
             metrics["stale_nodes"] = jnp.sum(fr.delayed.astype(jnp.int32))
         new_state = scen_mod.freeze_dropped(r.alive, state, new_state)
         metrics = self._realized_metrics(r, state, metrics)
+        metrics = self._partition_metrics(k, new_state, metrics)
         metrics["col_defect"] = fr.col_defect
         metrics["mean_drift"] = new_fs.drift
         metrics["dropped_msgs"] = fr.dropped.astype(jnp.float32)

@@ -39,6 +39,11 @@ Semantics of the three failure modes:
   * `straggler`  — the node misses the exchange window: it is excluded
                    from communication (self-loop in B^k) but still applies
                    its local gradient step.
+  * `partitions` — scheduled `PartitionWindow`s: every cross-component
+                   edge is cut for start <= k < heal (persistent, not
+                   i.i.d.), realizing a *block*-doubly-stochastic matrix
+                   per connected component; the heal step restores the
+                   base graph and gossip reconciles the drift.
 
 Static scenarios (`is_static`) are handled by `Algorithm.bind` as the
 existing fixed-`Topology` path — the exact same program, bit-identical by
@@ -67,12 +72,16 @@ from repro.core.topology import Topology
 
 __all__ = [
     "Scenario",
+    "PartitionWindow",
     "ScenarioArrays",
     "Realization",
     "SCENARIO_PRESETS",
     "get_scenario",
     "list_scenarios",
     "make_scenario_arrays",
+    "partition_components",
+    "active_components",
+    "component_stats",
     "edge_uniform",
     "sample_masks",
     "realize",
@@ -82,6 +91,45 @@ __all__ = [
     "freeze_dropped",
     "expected_matrix",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionWindow:
+    """One network split: every cross-component edge is cut for steps
+    ``start <= k < heal``, then the heal event restores the base graph.
+
+    The component map is either explicit (``components`` — a tuple of
+    node-id tuples covering every node exactly once) or derived from a
+    folded seed: ``n_parts`` seed nodes are drawn uniformly and the
+    split is their multi-source BFS Voronoi cells over the base graph,
+    so every part is connected by construction (persistent bridge-edge
+    cuts, not i.i.d. per-step noise).  Within the window the realized
+    matrix is *block*-doubly-stochastic: the Metropolis–Hastings
+    rebuild over realized degrees never sees a cross-component edge, so
+    each component preserves its own mean — and therefore the global
+    mean — for every step of the split.
+    """
+
+    start: int
+    heal: int
+    n_parts: int = 2
+    components: Optional[Tuple[Tuple[int, ...], ...]] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.start < 0:
+            raise ValueError("partition start must be non-negative")
+        if self.heal <= self.start:
+            raise ValueError(
+                f"partition heal step {self.heal} must be after start "
+                f"{self.start}"
+            )
+        if self.components is not None:
+            parts = tuple(tuple(int(i) for i in c) for c in self.components)
+            object.__setattr__(self, "components", parts)
+            object.__setattr__(self, "n_parts", len(parts))
+        if self.n_parts < 2:
+            raise ValueError("a partition needs n_parts >= 2")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,17 +145,35 @@ class Scenario:
     churn: float = 0.0       # P[a node is fully offline this step]
     straggler: float = 0.0   # P[a node misses the exchange this step]
     seed: int = 0
+    # scheduled network splits (persistent cross-component cuts with a
+    # heal step each) — non-overlapping, sorted by start
+    partitions: Tuple[PartitionWindow, ...] = ()
 
     def __post_init__(self):
         for field in ("edge_drop", "churn", "straggler"):
             v = getattr(self, field)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{field}={v} must be a probability in [0, 1]")
+        wins = tuple(sorted(self.partitions, key=lambda w: w.start))
+        object.__setattr__(self, "partitions", wins)
+        for a, b in zip(wins, wins[1:]):
+            if b.start < a.heal:
+                raise ValueError(
+                    f"partition windows overlap: [{a.start}, {a.heal}) and "
+                    f"[{b.start}, {b.heal})"
+                )
 
     @property
     def is_static(self) -> bool:
         """True iff every step realizes the base graph exactly."""
-        return self.edge_drop == self.churn == self.straggler == 0.0
+        return (self.edge_drop == self.churn == self.straggler == 0.0
+                and not self.partitions)
+
+    @property
+    def max_parts(self) -> int:
+        """Most components any scheduled window splits the graph into
+        (1 when no partitions — a single connected component)."""
+        return max((w.n_parts for w in self.partitions), default=1)
 
 
 SCENARIO_PRESETS = {
@@ -149,6 +215,11 @@ class ScenarioArrays(NamedTuple):
     nbrs_full: jax.Array  # [m, d+1] — neighbors then self
     is_self: jax.Array    # [m, d+1] bool — True only on the last slot
     key: jax.Array        # scenario PRNG key (fold_in with the step index)
+    # partition schedule, resolved to device masks (None without windows;
+    # trailing defaults keep every existing constructor/_replace call)
+    part_cut: Optional[jax.Array] = None     # [P, m, d] bool — cut edges
+    part_bounds: Optional[jax.Array] = None  # [P, 2] i32 — (start, heal)
+    part_comp: Optional[jax.Array] = None    # [P, m] i32 — component ids
 
     @property
     def m(self) -> int:
@@ -165,18 +236,89 @@ class Realization(NamedTuple):
     directed_edges: jax.Array  # i32 scalar — realized directed edge count
 
 
+def partition_components(topo: Topology, window: PartitionWindow) -> np.ndarray:
+    """Resolve one window to a per-node component id array ([m] int32).
+
+    Explicit ``components`` must cover every node exactly once.  Seeded
+    splits draw ``n_parts`` distinct seed nodes from
+    ``default_rng((seed, m, start))`` and grow them by multi-source BFS
+    over the base graph — each part is the Voronoi cell of its seed, so
+    parts are connected whenever the base graph is.  Nodes unreachable
+    from any seed (a disconnected base graph) join component 0.
+    """
+    m = topo.m
+    comp = np.full(m, -1, np.int32)
+    if window.components is not None:
+        for c, members in enumerate(window.components):
+            for i in members:
+                if not 0 <= i < m:
+                    raise ValueError(
+                        f"partition component {c} names node {i}, but the "
+                        f"graph has m={m} nodes (already departed?)"
+                    )
+                if comp[i] >= 0:
+                    raise ValueError(
+                        f"node {i} appears in two partition components"
+                    )
+                comp[i] = c
+        if np.any(comp < 0):
+            missing = np.nonzero(comp < 0)[0].tolist()
+            raise ValueError(
+                f"partition components must cover every node; missing "
+                f"{missing}"
+            )
+        return comp
+    if window.n_parts > m:
+        raise ValueError(
+            f"cannot split m={m} nodes into {window.n_parts} components"
+        )
+    rng = np.random.default_rng((int(window.seed), int(m), int(window.start)))
+    seeds = rng.choice(m, size=window.n_parts, replace=False)
+    comp[seeds] = np.arange(window.n_parts, dtype=np.int32)
+    frontier = list(int(s) for s in seeds)
+    while frontier:
+        nxt = []
+        for i in frontier:
+            for j in topo.neighbor_sets[i]:
+                if comp[j] < 0:
+                    comp[j] = comp[i]
+                    nxt.append(j)
+        frontier = nxt
+    comp[comp < 0] = 0
+    return comp
+
+
 def make_scenario_arrays(topo: Topology, scenario: Scenario) -> ScenarioArrays:
     nbrs, valid = topo.neighbor_matrix_padded()
     m, d = nbrs.shape
     self_col = np.arange(m, dtype=nbrs.dtype)[:, None]
     is_self = np.zeros((m, d + 1), dtype=bool)
     is_self[:, d] = True
+    part_cut = part_bounds = part_comp = None
+    # TemporalScenario shares this builder but has no partition schedule
+    windows = getattr(scenario, "partitions", ())
+    if windows:
+        comps = np.stack([
+            partition_components(topo, w) for w in windows
+        ])  # [P, m]
+        # an edge is cut while its window is open iff its endpoints land
+        # in different components (padding slots compare node-to-self —
+        # never cut, and masked by `valid` anyway)
+        cut = comps[:, :, None] != comps[:, nbrs]  # [P, m, d]
+        part_cut = jnp.asarray(cut)
+        part_bounds = jnp.asarray(
+            [(w.start, w.heal) for w in windows], jnp.int32
+        )
+        part_comp = jnp.asarray(comps, jnp.int32)
     return ScenarioArrays(
         nbrs=jnp.asarray(nbrs, jnp.int32),
         valid=jnp.asarray(valid),
         nbrs_full=jnp.asarray(np.concatenate([nbrs, self_col], axis=1), jnp.int32),
         is_self=jnp.asarray(is_self),
         key=jax.random.PRNGKey(scenario.seed),
+        part_cut=part_cut,
+        part_bounds=part_bounds,
+        part_comp=part_comp,
     )
 
 
@@ -274,6 +416,15 @@ def sample_masks(
     edge_up = jnp.ones((m, d), bool)
     if scenario.edge_drop > 0.0:
         edge_up = edge_uniform(k_edge, arrays.nbrs) >= scenario.edge_drop
+    if scenario.partitions:
+        # persistent cross-component cuts while a window is open; the
+        # cut mask is symmetric (comp(i) != comp(j) both ways), so the
+        # realized matrix stays symmetric and goes block-doubly-
+        # stochastic per component through the MH rebuild
+        in_win = ((k >= arrays.part_bounds[:, 0])
+                  & (k < arrays.part_bounds[:, 1]))        # [P]
+        cut = jnp.any(arrays.part_cut & in_win[:, None, None], axis=0)
+        edge_up = edge_up & ~cut
     return edge_up, alive, straggler
 
 
@@ -289,6 +440,49 @@ def realize(scenario: Scenario, arrays: ScenarioArrays, k: jax.Array) -> Realiza
     """
     edge_up, alive, straggler = sample_masks(scenario, arrays, k)
     return realization_from_masks(arrays, edge_up, alive, straggler)
+
+
+def active_components(arrays: ScenarioArrays, k: jax.Array) -> jax.Array:
+    """Per-node component id at step k ([m] i32, traceable).
+
+    All zeros outside every window (one connected component); inside a
+    window, that window's component map.  Windows never overlap
+    (validated by `Scenario`), so the sum-over-windows select is exact.
+    """
+    if arrays.part_comp is None:
+        return jnp.zeros((arrays.m,), jnp.int32)
+    in_win = ((k >= arrays.part_bounds[:, 0])
+              & (k < arrays.part_bounds[:, 1]))            # [P]
+    return jnp.sum(
+        jnp.where(in_win[:, None], arrays.part_comp, 0), axis=0
+    ).astype(jnp.int32)
+
+
+def component_stats(comp: jax.Array, x: jax.Array, n_comp: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-component consensus / drift scalars from flattened params.
+
+    ``comp`` is the [m] component id, ``x`` the [m, n] node-stacked
+    parameter matrix, ``n_comp`` the static component-count bound.
+    Returns ``(comp_consensus, comp_mean_gap)``:
+
+      * comp_consensus — mean over nodes of ||x_i − x̄_{comp(i)}||²,
+        the *within*-component disagreement (equals plain consensus
+        outside a partition window).
+      * comp_mean_gap  — max over non-empty components of
+        ||x̄_c − x̄_global||₂, the *between*-component drift built up
+        during a split (0 outside windows; post-heal decay of this gap
+        is the consensus-recovery headline).
+    """
+    x = x.astype(jnp.float32)
+    onehot = (comp[:, None] == jnp.arange(n_comp)[None, :]).astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)                       # [C]
+    means = (onehot.T @ x) / jnp.maximum(counts, 1.0)[:, None]
+    mine = means[comp]                                     # [m, n]
+    comp_consensus = jnp.mean(jnp.sum((x - mine) ** 2, axis=1))
+    gap = jnp.sqrt(jnp.sum((means - jnp.mean(x, axis=0)) ** 2, axis=1))
+    comp_mean_gap = jnp.max(jnp.where(counts > 0, gap, 0.0))
+    return comp_consensus, comp_mean_gap
 
 
 def realization_matrix(arrays: ScenarioArrays, r: Realization) -> jax.Array:

@@ -14,8 +14,20 @@ uniform existing nodes, the Metropolis–Hastings weights are re-derived
 over the grown graph (doubly stochastic ⇒ mean-preserving, checked at
 every join), and each joiner catches up by cloning a trained neighbor
 from the latest checkpoint (``--ckpt-dir``) or, absent one, the live
-state.  Crash faults are refused when joins are scheduled — their
-``rejoin`` path assumes fixed m (see ``membership.check_join_faults``).
+state.  Crash faults are refused when membership changes are scheduled —
+their ``rejoin`` path assumes fixed m (see
+``membership.check_membership_faults``).
+
+Chaos timeline: ``--chaos "leave@20:2,partition@40:bridge,heal@80,
+join@90:1"`` composes graceful departures (mass handoff to neighbors,
+mean-preserving and conformance-asserted), scheduled network partitions
+(persistent cross-component cuts realizing a block-doubly-stochastic
+matrix per component, healed with drift reconciliation), and joins in
+one run, with in-run invariant monitors (row/col stochasticity defect,
+per-component mean preservation) at every event boundary.  An empty
+timeline is bitwise identical to the plain serve_train path.  Serving
+failover: ``--serve-policy consensus`` answers every request from the
+node's *component's* PME-averaged model instead of its local copy.
 
     PYTHONPATH=src python -m repro.launch.serve_train --arch stablelm-1.6b \
         --steps 60 --nodes 8 --join 30:4 --arrival bursty \
@@ -39,6 +51,7 @@ from repro.configs import get_config
 from repro.core import engine
 from repro.core.algorithms import get_algorithm, list_algorithms
 from repro.core.faults import FaultModel
+from repro.core import scenarios as scen_mod
 from repro.core.scenarios import get_scenario, list_scenarios
 from repro.core.topology import build_topology
 from repro.data.synthetic import SyntheticTokens
@@ -94,10 +107,12 @@ def _make_batch_fn(args, cfg, m):
     return make_batch
 
 
-def _bind_for(args, cfg, topo, pacing, faults):
+def _bind_for(args, cfg, topo, pacing, faults, partitions=()):
     """(Re)bind the algorithm over the current topology — called at
     start and after every membership change (recompile is the price of a
-    new node count; the compilation cache amortizes repeats)."""
+    new node count; the compilation cache amortizes repeats).  Chaos
+    partition windows fold into the scenario here, so the in-scan
+    realization cuts cross-component edges while a window is open."""
 
     def grad_fn(p, b, k):
         del k
@@ -107,6 +122,8 @@ def _bind_for(args, cfg, topo, pacing, faults):
     hps = _hps_from_args(args.algo, args)
     scen = get_scenario(args.scenario)
     scen = dataclasses.replace(scen, seed=args.seed)
+    if partitions:
+        scen = dataclasses.replace(scen, partitions=tuple(partitions))
     bound = alg.bind(
         grad_fn, topo, hps, mixing=args.mixing, seed=args.seed,
         scenario=None if scen.is_static else scen,
@@ -119,10 +136,10 @@ def _bind_for(args, cfg, topo, pacing, faults):
     return bound, runner
 
 
-def _join_conformance(topo_new: "object", m_old: int) -> dict:
-    """The join conformance suite, run at every membership change:
-    the re-derived mixing matrix must stay doubly stochastic and
-    mean-preserving over the grown node set."""
+def _join_conformance(topo_new: "object", m_old: int, kind="join") -> dict:
+    """The membership conformance suite, run at every join/leave: the
+    re-derived mixing matrix must stay doubly stochastic and
+    mean-preserving over the changed node set."""
     w = topo_new.mixing
     rows_ok = bool(np.allclose(w.sum(axis=1), 1.0, atol=1e-9))
     cols_ok = bool(np.allclose(w.sum(axis=0), 1.0, atol=1e-9))
@@ -132,10 +149,99 @@ def _join_conformance(topo_new: "object", m_old: int) -> dict:
     ok = rows_ok and cols_ok and mean_ok
     if not ok:
         raise AssertionError(
-            f"join conformance FAILED at m={m_old}->{topo_new.m}: "
+            f"{kind} conformance FAILED at m={m_old}->{topo_new.m}: "
             f"rows={rows_ok} cols={cols_ok} mean={mean_ok}"
         )
     return {"rows": rows_ok, "cols": cols_ok, "mean": mean_ok}
+
+
+def _params_mean(bound, state) -> np.ndarray:
+    """Host copy of the global parameter mean (concatenated leaves) —
+    the quantity graceful departures must preserve."""
+    return np.concatenate([
+        np.asarray(jnp.mean(leaf.astype(jnp.float32), axis=0)).ravel()
+        for leaf in jax.tree_util.tree_leaves(bound.spec.params_of(state))
+    ])
+
+
+def _leave_conformance(pre_mean: np.ndarray, bound, state, m_old: int,
+                       m_new: int) -> None:
+    """Departure invariant: the survivors' parameter mean equals the
+    pre-departure global mean to float32 tolerance (the β-weighted
+    deviation handoff is mean-preserving by construction)."""
+    post_mean = _params_mean(bound, state)
+    scale = max(float(np.max(np.abs(pre_mean))), 1.0)
+    if not np.allclose(post_mean, pre_mean, atol=1e-5 * scale, rtol=1e-5):
+        worst = float(np.max(np.abs(post_mean - pre_mean)))
+        raise AssertionError(
+            f"leave conformance FAILED at m={m_old}->{m_new}: survivor "
+            f"mean drifted by {worst:.3e} (float32 tolerance exceeded)"
+        )
+
+
+def _active_comp(bound, k):
+    """Host copy of the step's component-id vector (None when the bind
+    schedules no partitions — a single global component)."""
+    arrays = getattr(bound, "scen_arrays", None)
+    if arrays is None or arrays.part_comp is None:
+        return None
+    return np.asarray(scen_mod.active_components(arrays, jnp.int32(k)))
+
+
+def _chaos_monitor(bound, k: int, tag: str) -> None:
+    """In-run invariant monitor for chaos runs: realizes step k's matrix
+    host-side and asserts the paper's Assumption-1 invariants — row/col
+    stochasticity defect at float32 tolerance, zero cross-component mass
+    while a partition window is open, and per-component (hence global)
+    mean preservation."""
+    if not bound.dynamic or getattr(bound, "temporal", False):
+        return
+    arrays = bound.scen_arrays
+    r = scen_mod.realize(bound.scenario, arrays, jnp.int32(k))
+    w = np.asarray(scen_mod.realization_matrix(arrays, r), np.float64)
+    row_defect = float(np.max(np.abs(w.sum(axis=1) - 1.0)))
+    col_defect = float(np.max(np.abs(w.sum(axis=0) - 1.0)))
+    assert row_defect < 1e-4 and col_defect < 1e-4, (
+        f"{tag}: stochasticity defect rows={row_defect:.2e} "
+        f"cols={col_defect:.2e} at k={k}"
+    )
+    comp = _active_comp(bound, k)
+    x = np.random.default_rng(1).standard_normal((w.shape[0], 5))
+    if comp is not None and comp.max() > 0:
+        cross = float(w[comp[:, None] != comp[None, :]].sum())
+        assert cross == 0.0, (
+            f"{tag}: {cross:.2e} cross-component mass inside an open "
+            f"partition window at k={k}"
+        )
+        for c in np.unique(comp):
+            sel = comp == c
+            pre = x[sel].mean(axis=0)
+            post = (w @ x)[sel].mean(axis=0)
+            assert np.allclose(post, pre, atol=1e-5), (
+                f"{tag}: component {c} mean not preserved at k={k}"
+            )
+    else:
+        assert np.allclose((w @ x).mean(axis=0), x.mean(axis=0),
+                           atol=1e-5), f"{tag}: global mean not preserved"
+    print(
+        f"[serve-train] monitor@{k} {tag}: stochasticity defect "
+        f"{max(row_defect, col_defect):.1e}, mean-preserving (green)",
+        flush=True,
+    )
+
+
+def _comp_drift(bound, state, comp) -> float:
+    """Max ℓ2 gap between any component's parameter mean and the global
+    mean — the drift a heal event hands back to gossip to reconcile."""
+    x = np.concatenate([
+        np.asarray(leaf).reshape(leaf.shape[0], -1).astype(np.float32)
+        for leaf in jax.tree_util.tree_leaves(bound.spec.params_of(state))
+    ], axis=1)
+    gmean = x.mean(axis=0)
+    return max(
+        float(np.linalg.norm(x[comp == c].mean(axis=0) - gmean))
+        for c in np.unique(comp)
+    )
 
 
 def _serve_report(tag, stats, es=None):
@@ -213,6 +319,18 @@ def make_parser() -> argparse.ArgumentParser:
                          "(default --join-degree); catch-up clones a "
                          "trained neighbor from --ckpt-dir or live state")
     ap.add_argument("--join-degree", type=int, default=2)
+    ap.add_argument("--chaos", default=None, metavar="KIND@STEP[:ARG],...",
+                    help="chaos timeline composed with --join: leave@S:N "
+                         "(N highest-id nodes depart gracefully), "
+                         "partition@S:P|bridge (split into P components), "
+                         "heal@S, join@S:N[:DEG].  Empty timeline keeps "
+                         "the plain serve_train path bitwise identical")
+    ap.add_argument("--serve-policy", default="local",
+                    choices=["local", "consensus"],
+                    help="what each node serves FROM: its own local model "
+                         "(freshest) or its connected component's "
+                         "PME-averaged model (coherent failover during "
+                         "splits and departures)")
     # faults (to compose — and to demonstrate the crash+join refusal)
     ap.add_argument("--loss-rate", type=float, default=None,
                     help="P[a directed message is dropped] per step")
@@ -241,22 +359,32 @@ def _faults_from_args(args):
     )
 
 
-def main(argv=None) -> None:
+def main(argv=None):
     args = make_parser().parse_args(argv)
     cache_dir = engine.setup_compilation_cache(args.compile_cache)
     if cache_dir:
         print(f"[serve-train] compilation cache at {cache_dir}", flush=True)
 
-    joins = deque(mb_mod.parse_join_spec(args.join, args.join_degree))
+    timeline = mb_mod.parse_chaos_spec(args.chaos, args.join_degree)
+    events = deque(sorted(
+        timeline + tuple(
+            mb_mod.ChaosEvent(step=e.step, kind="join", n=e.n_new,
+                              degree=e.degree)
+            for e in mb_mod.parse_join_spec(args.join, args.join_degree)
+        ),
+        key=lambda e: e.step,
+    ))
     faults = _faults_from_args(args)
-    if joins:
-        mb_mod.check_join_faults(faults)
+    if events:
+        mb_mod.check_membership_faults(faults, tuple(events), m0=args.nodes)
+    windows = mb_mod.chaos_partitions(tuple(events), args.steps,
+                                      seed=args.seed)
     pacing = _pacing_from_args(args)
 
     cfg = get_config(args.arch, args.variant)
     m = args.nodes
     topo = build_topology(args.topology, m, p=0.5, seed=args.seed)
-    bound, runner = _bind_for(args, cfg, topo, pacing, faults)
+    bound, runner = _bind_for(args, cfg, topo, pacing, faults, windows)
     make_batch = _make_batch_fn(args, cfg, m)
 
     params0 = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -274,12 +402,16 @@ def main(argv=None) -> None:
     n_params = sum(
         int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params0)
     )
+    ev_summary = [
+        f"{e.kind}@{e.step}" + (f":{e.n}" if e.n else "") for e in events
+    ]
     print(
         f"[serve-train] algo={args.algo} nodes={m} "
         f"arrival={pacing.process.name} "
         f"(rate={pacing.process.rate}/{pacing.process.burst_rate} "
         f"cap={pacing.capacity} defer>{pacing.defer_threshold}) "
-        f"joins={[f'{e.step}:+{e.n_new}' for e in joins] or 'none'} "
+        f"events={ev_summary or 'none'} "
+        f"serve-policy={args.serve_policy} "
         f"params={n_params / 1e6:.2f}M",
         flush=True,
     )
@@ -295,9 +427,9 @@ def main(argv=None) -> None:
     deferred_total = 0.0
     while k < args.steps:
         boundary = args.steps
-        if joins:
-            boundary = min(boundary, joins[0].step)
-        if k >= boundary:  # join scheduled at or before the current step
+        if events:
+            boundary = min(boundary, events[0].step)
+        if k >= boundary:  # event scheduled at or before the current step
             boundary = min(args.steps, k + args.chunk)
         length = min(args.chunk, boundary - k)
         if length > 0:
@@ -316,6 +448,9 @@ def main(argv=None) -> None:
                     f" deferred={d:.0f}/{length * m} node-rounds"
                     f" queue={float(np.asarray(metrics['queue_depth'])[-1]):.1f}"
                 )
+            if "comp_mean_gap" in metrics:
+                gap = float(np.asarray(metrics["comp_mean_gap"])[-1])
+                extra += f" comp-gap={gap:.2e}"
             print(
                 f"[serve-train] step={k} m={m} loss={loss:.4f}{extra}"
                 f" ({(time.time() - t0) / max(k, 1):.2f}s/step)",
@@ -326,7 +461,13 @@ def main(argv=None) -> None:
             ids = [(serve_cursor + i) % m
                    for i in range(min(args.serve_nodes, m))]
             serve_cursor = (serve_cursor + args.serve_nodes) % m
-            stats = serve.serve_round(bound.spec.params_of(state), ids)
+            comp = None
+            if args.serve_policy == "consensus":
+                comp = _active_comp(bound, max(k - 1, 0))
+            stats = serve.serve_round(
+                bound.spec.params_of(state), ids,
+                policy=args.serve_policy, comp=comp,
+            )
             es = aux.events if (aux is not None and bound.paced) else None
             _serve_report(f"[serve-train] serve@{k}", stats, es)
             next_serve += serve_every
@@ -338,13 +479,82 @@ def main(argv=None) -> None:
             save_checkpoint(args.ckpt_dir, k, payload)
             next_ckpt = (k // args.ckpt_every + 1) * args.ckpt_every
 
-        while joins and k >= joins[0].step:
-            ev = joins.popleft()
-            if ev.n_new == 0:
+        while events and k >= events[0].step:
+            ev = events.popleft()
+            # future partition windows re-resolve against the current
+            # topology at every rebind (check_membership_faults already
+            # forbade membership changes inside an open window)
+            future = tuple(w for w in windows if w.start >= k)
+
+            if ev.kind == "partition":
+                print(
+                    f"[serve-train] partition@{k}: graph split into "
+                    f"{ev.n} components (cross-component edges cut "
+                    "until heal)",
+                    flush=True,
+                )
+                _chaos_monitor(bound, k, f"partition@{ev.step}")
+                continue
+
+            if ev.kind == "heal":
+                comp = _active_comp(bound, max(ev.step - 1, 0))
+                drift = (
+                    _comp_drift(bound, state, comp)
+                    if comp is not None and comp.max() > 0 else 0.0
+                )
+                print(
+                    f"[serve-train] heal@{k}: partition re-merged; "
+                    f"component mean drift {drift:.3e} handed back to "
+                    "gossip to reconcile",
+                    flush=True,
+                )
+                _chaos_monitor(bound, k, f"heal@{ev.step}")
+                continue
+
+            if ev.kind == "leave":
+                if ev.n == 0:
+                    continue
+                m_old = m
+                # LIFO departure: the highest-id nodes retire, so state
+                # rows stay contiguous and survivors keep their shards
+                leavers = tuple(range(m - ev.n, m))
+                pre_mean = _params_mean(bound, state)
+                state = mb_mod.retire_state(state, topo, leavers)
+                topo = mb_mod.shrunk_topology(topo, leavers)
+                m = topo.m
+                conf = _join_conformance(topo, m_old, kind="leave")
+                old_events = (
+                    aux.events if (aux is not None and bound.paced)
+                    else None
+                )
+                bound, runner = _bind_for(args, cfg, topo, pacing, faults,
+                                          future)
+                make_batch = _make_batch_fn(args, cfg, m)
+                if bound.carries_aux:
+                    aux = bound.aux_init(state)
+                    if bound.paced and old_events is not None:
+                        # survivors keep their cumulative QPS/latency
+                        aux = aux._replace(events=ev_mod.shrink_events(
+                            old_events, list(range(m))))
+                else:
+                    aux = None
+                _leave_conformance(pre_mean, bound, state, m_old, m)
+                print(
+                    f"[serve-train] leave@{k}: m={m_old}->{m} "
+                    f"retired={list(leavers)} deviation mass handed to "
+                    f"neighbors (mean-preserving) conformance: "
+                    f"doubly-stochastic={conf['rows'] and conf['cols']} "
+                    f"mean-preserving={conf['mean']} (green)",
+                    flush=True,
+                )
+                continue
+
+            # ev.kind == "join"
+            if ev.n == 0:
                 continue
             m_old = m
             topo = mb_mod.grown_topology(
-                topo, ev.n_new, degree=ev.degree, seed=args.seed
+                topo, ev.n, degree=ev.degree, seed=args.seed
             )
             m = topo.m
             donors = mb_mod.default_donors(topo, m_old)
@@ -372,7 +582,8 @@ def main(argv=None) -> None:
             old_events = (
                 aux.events if (aux is not None and bound.paced) else None
             )
-            bound, runner = _bind_for(args, cfg, topo, pacing, faults)
+            bound, runner = _bind_for(args, cfg, topo, pacing, faults,
+                                      future)
             make_batch = _make_batch_fn(args, cfg, m)
             if bound.carries_aux:
                 aux = bound.aux_init(state)
@@ -380,7 +591,7 @@ def main(argv=None) -> None:
                     # carry cumulative QPS/latency accounting through
                     # the join; fresh rows for the new nodes
                     aux = aux._replace(
-                        events=ev_mod.expand_events(old_events, ev.n_new)
+                        events=ev_mod.expand_events(old_events, ev.n)
                     )
             else:
                 aux = None
@@ -417,6 +628,7 @@ def main(argv=None) -> None:
             flush=True,
         )
     print("[serve-train] done")
+    return state
 
 
 if __name__ == "__main__":

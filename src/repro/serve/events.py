@@ -32,6 +32,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "ArrivalProcess",
@@ -42,6 +43,7 @@ __all__ = [
     "PacedCarry",
     "ServePacing",
     "expand_events",
+    "shrink_events",
 ]
 
 
@@ -234,5 +236,26 @@ def expand_events(es: EventState, n_new: int) -> EventState:
         arrived=grow_i32(es.arrived),
         served=grow_i32(es.served),
         wait=grow_i32(es.wait),
+        key=es.key,
+    )
+
+
+def shrink_events(es: EventState, keep) -> EventState:
+    """Shrink the event clock to the surviving nodes (graceful leave).
+
+    ``keep`` indexes the survivors in the pre-departure numbering; their
+    cumulative QPS/latency accounting carries through the departure.  A
+    departed node's still-queued requests leave with it — its traffic is
+    the consensus-serving failover's problem, not the event clock's.
+    """
+    keep = jnp.asarray(np.asarray(keep, np.int64))
+    if keep.shape[0] == es.queue.shape[0]:
+        return es
+    return EventState(
+        hi=es.hi[keep],
+        queue=es.queue[keep],
+        arrived=es.arrived[keep],
+        served=es.served[keep],
+        wait=es.wait[keep],
         key=es.key,
     )

@@ -1,9 +1,9 @@
-"""Elastic membership: genuinely new nodes joining a running DFL system.
+"""Elastic membership: nodes joining AND leaving a running DFL system.
 
 The fault layer's crash/rejoin chain (``repro.core.faults``) is a
 *fixed-m* recovery path: a crashed node's state freezes bitwise and the
-node count never changes.  This module implements true joins — the node
-set grows mid-run:
+node count never changes.  This module implements true membership
+changes — the node set grows and shrinks mid-run:
 
   * :func:`grown_topology` attaches each new node to ``degree`` uniform
     existing nodes and re-derives the Metropolis–Hastings weights over
@@ -15,10 +15,28 @@ set grows mid-run:
     (``repro.checkpoint.store``).  For a node whose state has not moved
     since the checkpoint the two paths are bitwise identical (pinned by
     the conformance suite).
-  * :func:`check_join_faults` is the loud guard against mixing the two
-    recovery paths: crash faults (``FaultModel.crash > 0``) assume
+  * :func:`shrunk_topology` + :func:`retire_state` are the graceful
+    *departure* half: a leaving node hands its parameter mass to its
+    neighbors — each survivor j absorbs β_j·(x_ℓ − x̄) where β_j is the
+    leaver's MH weight toward j renormalized over its neighbors
+    (Σβ_j = 1) and x̄ is the pre-departure global mean, so the survivor
+    mean equals the pre-departure mean *exactly* (mean-preserving by
+    construction; near consensus the handoff vanishes) — then the MH
+    weights are re-derived over the survivor set and the engine
+    continues at reduced m.  Contrast with the crash chain's fixed-m
+    bitwise freeze.
+  * :func:`parse_chaos_spec` is the declarative chaos timeline —
+    ``"leave@200:2,partition@400:bridge,heal@800,join@900:1"`` — that
+    composes leaves/joins with scheduled network partitions
+    (``repro.core.scenarios.PartitionWindow``).
+  * :func:`check_membership_faults` is the loud guard against mixing
+    the recovery paths: crash faults (``FaultModel.crash > 0``) assume
     fixed-m ``rejoin`` semantics and may not be combined with elastic
-    membership.
+    membership, and chaos timelines that would silently produce a
+    non-stochastic realization (leave+join at one step, membership
+    changes inside an open partition window, emptying the graph) are
+    rejected up front.  :func:`check_join_faults` remains the join-only
+    entry point.
 
 PaME's per-node draws stay stable across growth: ``make_topology_arrays``
 draws kappa_i sequentially from ``default_rng(seed)``, so the first
@@ -36,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import faults as flt_mod
+from repro.core.scenarios import PartitionWindow
 from repro.core.topology import (
     Topology,
     metropolis_matrix,
@@ -44,12 +63,18 @@ from repro.core.topology import (
 
 __all__ = [
     "JoinEvent",
+    "ChaosEvent",
     "parse_join_spec",
+    "parse_chaos_spec",
+    "chaos_partitions",
     "topology_from_adjacency",
     "grown_topology",
+    "shrunk_topology",
     "default_donors",
     "expand_state",
+    "retire_state",
     "check_join_faults",
+    "check_membership_faults",
 ]
 
 
@@ -87,6 +112,145 @@ def parse_join_spec(spec: Optional[str], degree: int = 2
             degree=int(fields[2]) if len(fields) == 3 else degree,
         ))
     return tuple(sorted(events, key=lambda e: e.step))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One entry of a chaos timeline.
+
+    ``kind`` is one of:
+
+      * ``"leave"``     — ``n`` nodes depart gracefully at ``step`` (the
+                          highest-id nodes: LIFO departure, so state
+                          rows stay contiguous and the most recently
+                          joined leave first).
+      * ``"join"``      — ``n`` new nodes join, each attached to
+                          ``degree`` uniform existing nodes.
+      * ``"partition"`` — the graph splits into ``n`` connected
+                          components at ``step`` (seeded multi-source
+                          BFS cut; ``n=2`` is the classic bridge cut).
+      * ``"heal"``      — the open partition re-merges at ``step``.
+    """
+
+    step: int
+    kind: str
+    n: int = 0
+    degree: int = 2
+
+    def __post_init__(self):
+        if self.kind not in ("leave", "join", "partition", "heal"):
+            raise ValueError(f"unknown chaos event kind {self.kind!r}")
+        if self.step < 0:
+            raise ValueError("chaos event step must be non-negative")
+        if self.kind in ("leave", "join") and self.n < 0:
+            raise ValueError(f"{self.kind} count must be non-negative")
+        if self.kind == "partition" and self.n < 2:
+            raise ValueError("a partition needs at least 2 components")
+        if self.kind == "join" and self.degree < 1:
+            raise ValueError("join degree must be >= 1")
+
+
+def parse_chaos_spec(spec: Optional[str], degree: int = 2
+                     ) -> Tuple[ChaosEvent, ...]:
+    """Parse the declarative chaos timeline grammar.
+
+    Comma-separated ``KIND@STEP[:ARG[:ARG]]`` entries, e.g.::
+
+        leave@200:2,partition@400:bridge,heal@800,join@900:1
+
+      * ``leave@STEP:N``          — N highest-id nodes depart
+      * ``partition@STEP:bridge`` — split into 2 components
+      * ``partition@STEP:P``      — split into P components
+      * ``heal@STEP``             — re-merge the open partition
+      * ``join@STEP:N[:DEG]``     — N joiners at attach degree DEG
+
+    Events are returned sorted by step.  An empty/None spec is the
+    empty timeline — callers keep the plain serve_train path bitwise.
+    """
+    if not spec:
+        return ()
+    events = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "@" not in part:
+            raise ValueError(
+                f"chaos event {part!r} is not KIND@STEP[:ARG[:ARG]]"
+            )
+        kind, _, rest = part.partition("@")
+        fields = rest.split(":")
+        kind = kind.strip()
+        if kind == "heal":
+            if len(fields) != 1:
+                raise ValueError(f"heal takes no argument: {part!r}")
+            events.append(ChaosEvent(step=int(fields[0]), kind="heal"))
+        elif kind == "partition":
+            if len(fields) != 2:
+                raise ValueError(
+                    f"partition needs one argument (bridge or a part "
+                    f"count): {part!r}"
+                )
+            n = 2 if fields[1].strip() == "bridge" else int(fields[1])
+            events.append(ChaosEvent(step=int(fields[0]), kind="partition",
+                                     n=n))
+        elif kind == "leave":
+            if len(fields) != 2:
+                raise ValueError(f"leave needs a node count: {part!r}")
+            events.append(ChaosEvent(step=int(fields[0]), kind="leave",
+                                     n=int(fields[1])))
+        elif kind == "join":
+            if len(fields) not in (2, 3):
+                raise ValueError(
+                    f"join is join@STEP:N[:DEGREE]: {part!r}"
+                )
+            events.append(ChaosEvent(
+                step=int(fields[0]), kind="join", n=int(fields[1]),
+                degree=int(fields[2]) if len(fields) == 3 else degree,
+            ))
+        else:
+            raise ValueError(
+                f"unknown chaos event kind {kind!r} in {part!r} "
+                "(leave/partition/heal/join)"
+            )
+    return tuple(sorted(events, key=lambda e: e.step))
+
+
+def chaos_partitions(events: Sequence[ChaosEvent], num_steps: int,
+                     seed: int = 0) -> Tuple[PartitionWindow, ...]:
+    """Fold a timeline's partition/heal pairs into `PartitionWindow`s.
+
+    Each ``partition`` opens a window that the next ``heal`` closes; an
+    unhealed partition runs to ``num_steps``.  A heal without an open
+    partition, or a partition while one is open, raises — the grammar
+    would otherwise silently realize a non-schedulable cut.
+    """
+    windows = []
+    open_ev: Optional[ChaosEvent] = None
+    for ev in sorted(events, key=lambda e: e.step):
+        if ev.kind == "partition":
+            if open_ev is not None:
+                raise ValueError(
+                    f"partition@{ev.step} while the partition@"
+                    f"{open_ev.step} window is still open (heal it first)"
+                )
+            open_ev = ev
+        elif ev.kind == "heal":
+            if open_ev is None:
+                raise ValueError(
+                    f"heal@{ev.step} without an open partition"
+                )
+            windows.append(PartitionWindow(
+                start=open_ev.step, heal=ev.step, n_parts=open_ev.n,
+                seed=seed,
+            ))
+            open_ev = None
+    if open_ev is not None:
+        windows.append(PartitionWindow(
+            start=open_ev.step, heal=max(num_steps, open_ev.step + 1),
+            n_parts=open_ev.n, seed=seed,
+        ))
+    return tuple(windows)
 
 
 def topology_from_adjacency(a: np.ndarray) -> Topology:
@@ -130,6 +294,28 @@ def grown_topology(topo: Topology, n_new: int, degree: int = 2,
         a[i, targets] = 1
         a[targets, i] = 1
     return topology_from_adjacency(a)
+
+
+def shrunk_topology(topo: Topology, leavers: Sequence[int]) -> Topology:
+    """Remove ``leavers`` from the graph and re-derive the
+    Metropolis–Hastings weights over the survivor set — symmetric ⇒
+    doubly stochastic by construction, same conformance as
+    :func:`grown_topology`.  Surviving node ids compact downward in
+    order (survivor i keeps its relative position).
+
+    Zero leavers return ``topo`` unchanged — the same object.
+    """
+    leavers = sorted({int(i) for i in leavers})
+    if not leavers:
+        return topo
+    if leavers[0] < 0 or leavers[-1] >= topo.m:
+        raise ValueError(f"leavers must index nodes [0, {topo.m})")
+    if len(leavers) >= topo.m:
+        raise ValueError(
+            f"cannot retire all {topo.m} nodes — at least one must remain"
+        )
+    keep = np.asarray([i for i in range(topo.m) if i not in set(leavers)])
+    return topology_from_adjacency(topo.adjacency[np.ix_(keep, keep)])
 
 
 def default_donors(topo_new: Topology, m_old: int) -> np.ndarray:
@@ -177,6 +363,71 @@ def expand_state(state: object, m_old: int, donors: Sequence[int],
     return jax.tree_util.tree_map(grow, state, src)
 
 
+def retire_state(state: object, topo: Topology,
+                 leavers: Sequence[int]) -> object:
+    """Shrink every node-stacked state leaf, handing each leaver's
+    parameter mass to its neighbors — mean-preserving by construction.
+
+    For each leaver ℓ (processed highest-id first, each against the
+    current shrinking topology's mixing matrix), every surviving node j
+    absorbs ``β_j · (x_ℓ − x̄)`` where ``β_j = B_ℓj / (1 − B_ℓℓ)`` is
+    the leaver's MH weight toward j renormalized over its neighbors
+    (``Σ_j β_j = 1``; an isolated leaver hands off uniformly) and
+    ``x̄`` is the mean over ALL current nodes including ℓ.  The survivor
+    mean then equals the pre-departure global mean *exactly*:
+
+        (Σ_{j≠ℓ} x_j + (x_ℓ − x̄)) / (m−1) = ((m−1)·x̄) / (m−1) = x̄
+
+    Near consensus (x_ℓ ≈ x̄) the handoff vanishes — a graceful leave
+    costs nothing, unlike the crash chain's frozen row.  The handoff
+    applies to every floating node-stacked leaf (leaves identical
+    across nodes — momentum at init, penalty schedules — hand off a
+    zero deviation, so it is exact for them too); integer leaves
+    (per-node PRNG keys) simply drop the leaver's row.
+
+    Zero leavers return ``state`` unchanged — bitwise.
+    """
+    leavers = sorted({int(i) for i in leavers}, reverse=True)
+    if not leavers:
+        return state
+    if leavers[-1] < 0 or leavers[0] >= topo.m:
+        raise ValueError(f"leavers must index nodes [0, {topo.m})")
+    if len(leavers) >= topo.m:
+        raise ValueError(
+            f"cannot retire all {topo.m} nodes — at least one must remain"
+        )
+    cur_topo = topo
+    for ell in leavers:
+        m = cur_topo.m
+        b_row = np.asarray(cur_topo.mixing[ell], np.float64)
+        b_ll = float(b_row[ell])
+        if b_ll >= 1.0 - 1e-12:  # isolated leaver: uniform handoff
+            beta = np.full(m, 1.0 / (m - 1))
+        else:
+            beta = b_row / (1.0 - b_ll)
+        beta[ell] = 0.0
+        keep = np.asarray([i for i in range(m) if i != ell])
+        didx = jnp.asarray(keep)
+        beta_keep = jnp.asarray(beta[keep], jnp.float32)
+
+        def shrink(leaf, _ell=ell, _m=m, _didx=didx, _beta=beta_keep):
+            if not hasattr(leaf, "shape") or getattr(leaf, "ndim", 0) < 1:
+                return leaf
+            if leaf.shape[0] != _m:
+                return leaf
+            leaf = jnp.asarray(leaf)
+            kept = leaf[_didx]
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return kept
+            dev = (leaf[_ell] - jnp.mean(leaf, axis=0)).astype(leaf.dtype)
+            b = _beta.reshape((_m - 1,) + (1,) * (leaf.ndim - 1))
+            return kept + (b * dev).astype(leaf.dtype)
+
+        state = jax.tree_util.tree_map(shrink, state)
+        cur_topo = shrunk_topology(cur_topo, (ell,))
+    return state
+
+
 def check_join_faults(faults: Optional[flt_mod.FaultModel]) -> None:
     """Refuse to mix the two recovery paths.
 
@@ -198,3 +449,89 @@ def check_join_faults(faults: Optional[flt_mod.FaultModel]) -> None:
             "model churn with Scenario(churn=...) which composes with "
             "joins."
         )
+
+
+def check_membership_faults(
+    faults: Optional[flt_mod.FaultModel],
+    events: Sequence[ChaosEvent] = (),
+    m0: Optional[int] = None,
+) -> None:
+    """Validate a chaos timeline loudly instead of letting it silently
+    produce a non-stochastic realization.
+
+    Rejects, in order of how subtly each would corrupt the run:
+
+      * crash faults combined with any membership change (leave/join) —
+        the crash chain's fixed-m ``rejoin`` path would restore a frozen
+        row into a graph it was never weighted for, and a scheduled
+        leave could retire a node whose state is mid-crash (the
+        "leaving a crashed node" hazard): the frozen mass would be
+        handed off from a stale snapshot.
+      * a leave and a join at the same step — the leaver ids and joiner
+        ids would alias the same rows (leave+join at one step targeting
+        one id is order-dependent), so the two must be scheduled at
+        distinct steps.
+      * a membership change inside an open partition window — the
+        partition's component map was drawn over a node set that no
+        longer exists (partitioning an already-departed node), so the
+        realized matrix would cut edges of phantom nodes.  Heal first,
+        then change membership.
+      * a timeline that empties the graph (``m0`` given): cumulative
+        leaves/joins must keep at least one node at every event.
+
+    :func:`check_join_faults` (crash × join) remains the join-only
+    entry point and is applied here as the first check.
+    """
+    events = tuple(sorted(events, key=lambda e: e.step))
+    membership = [e for e in events if e.kind in ("leave", "join") and e.n > 0]
+    if membership and faults is not None and faults.crash > 0.0:
+        kinds = sorted({e.kind for e in membership})
+        raise ValueError(
+            f"chaos timeline schedules membership changes ({'/'.join(kinds)}) "
+            f"but crash faults are bound (FaultModel(crash={faults.crash})): "
+            "the fixed-m rejoin path freezes state rows in place, so a "
+            "departure could retire a crashed node's stale snapshot and a "
+            "join would rejoin crashes into a re-weighted graph.  Run "
+            "crashes without membership changes, or drop --crash."
+        )
+    by_step: dict = {}
+    for e in membership:
+        by_step.setdefault(e.step, set()).add(e.kind)
+    for step, kinds in sorted(by_step.items()):
+        if len(kinds) > 1:
+            raise ValueError(
+                f"leave and join scheduled at the same step {step}: the "
+                "retired and joining rows would alias — schedule them at "
+                "distinct steps"
+            )
+    open_since: Optional[int] = None
+    m = m0
+    for e in events:
+        if e.kind == "partition":
+            if m is not None and e.n > m:
+                raise ValueError(
+                    f"partition@{e.step} into {e.n} components, but only "
+                    f"{m} nodes remain at that step"
+                )
+            open_since = e.step
+        elif e.kind == "heal":
+            open_since = None
+        elif open_since is not None:
+            raise ValueError(
+                f"{e.kind}@{e.step} inside the partition window open since "
+                f"step {open_since}: the component map was drawn over the "
+                "pre-change node set (it would partition already-departed "
+                "or not-yet-joined nodes).  Heal the split before changing "
+                "membership."
+            )
+        if m is not None:
+            if e.kind == "leave":
+                if e.n >= m:
+                    raise ValueError(
+                        f"leave@{e.step}:{e.n} would retire "
+                        f"{'all' if e.n == m else 'more than all'} "
+                        f"{m} remaining nodes"
+                    )
+                m -= e.n
+            elif e.kind == "join":
+                m += e.n

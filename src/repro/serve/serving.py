@@ -29,7 +29,41 @@ import numpy as np
 
 from repro.models import decode_step, prefill
 
-__all__ = ["decode_greedy", "ServeLoop"]
+__all__ = ["decode_greedy", "component_mean_params", "ServeLoop"]
+
+
+def component_mean_params(params_stacked: object, comp=None) -> object:
+    """Per-node *component-mean* parameter stack ([m, ...] leaves).
+
+    Row i of the result is the mean over the nodes sharing i's connected
+    component (``comp`` — the [m] component-id vector from
+    ``repro.core.scenarios.active_components``; None = one component =
+    the global PME average).  This is the consensus-serving failover:
+    during a network split each side serves its own component's
+    averaged model, and a departed/cut-off node's traffic is answered
+    by the component model instead of a stale local copy.
+    """
+    stacked = [
+        leaf for leaf in jax.tree_util.tree_leaves(params_stacked)
+        if getattr(leaf, "ndim", 0) >= 1
+    ]
+    m = stacked[0].shape[0]
+    if comp is None:
+        comp = jnp.zeros((m,), jnp.int32)
+    else:
+        comp = jnp.asarray(np.asarray(comp), jnp.int32)
+    n_comp = int(np.asarray(comp).max()) + 1
+    onehot = (comp[:, None] == jnp.arange(n_comp)[None, :]).astype(jnp.float32)
+    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)           # [C]
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) < 1 or leaf.shape[0] != m:
+            return leaf  # scalars / unstacked leaves pass through
+        flat = jnp.reshape(leaf, (m, -1)).astype(jnp.float32)
+        means = (onehot.T @ flat) / counts[:, None]              # [C, n]
+        return jnp.reshape(means[comp], leaf.shape).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(one, params_stacked)
 
 
 def decode_greedy(
@@ -136,13 +170,34 @@ class ServeLoop:
         self,
         params_stacked: object,
         node_ids: Optional[Sequence[int]] = None,
+        policy: str = "local",
+        comp=None,
     ) -> Dict[int, Dict[str, float]]:
-        """Serve one decode batch on each requested node's local model.
+        """Serve one decode batch on each requested node's model.
 
         ``params_stacked`` is the node-stacked parameter pytree ([m, ...]
         leaves); per-node slices share one shape, so every node reuses
         the same compiled executables.
+
+        ``policy`` picks what each node serves FROM:
+
+          * ``"local"``     — node i's own current parameters (the
+                              accuracy-vs-staleness default: freshest for
+                              i's data, but stale for traffic failing
+                              over from a departed or cut-off node).
+          * ``"consensus"`` — the PME-averaged model of i's connected
+                              component (``comp`` from the partition
+                              schedule; None = the global average), so a
+                              split component still serves one coherent
+                              model and failover traffic never reads a
+                              desynced local copy.
         """
+        if policy not in ("local", "consensus"):
+            raise ValueError(
+                f"unknown serving policy {policy!r} (local | consensus)"
+            )
+        if policy == "consensus":
+            params_stacked = component_mean_params(params_stacked, comp)
         if node_ids is None:
             leaves = jax.tree_util.tree_leaves(params_stacked)
             node_ids = range(leaves[0].shape[0])

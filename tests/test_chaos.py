@@ -1,0 +1,268 @@
+"""Network partitions, healing, and the chaos timeline.
+
+Covers the chaos grammar, the partition schedule's block-doubly-
+stochastic realization (zero cross-component mass inside a window, the
+base matrix back after heal), per-component consensus metrics in the
+history buffers, and the serve_train bitwise pin: an empty chaos
+timeline reproduces the plain serve-while-train run exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import PaMEHp, get_algorithm
+from repro.core.scenarios import (
+    PartitionWindow,
+    Scenario,
+    active_components,
+    component_stats,
+    make_scenario_arrays,
+    partition_components,
+    realization_matrix,
+    realize,
+)
+from repro.core.topology import build_topology
+from repro.serve import membership as mb
+
+M = 8
+
+
+def _topo(seed=3):
+    return build_topology("erdos_renyi", M, p=0.5, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Chaos grammar
+# ---------------------------------------------------------------------------
+def test_parse_chaos_spec_grammar():
+    evs = mb.parse_chaos_spec(
+        "leave@200:2,partition@400:bridge,heal@800,join@900:1", degree=3)
+    assert evs == (
+        mb.ChaosEvent(step=200, kind="leave", n=2),
+        mb.ChaosEvent(step=400, kind="partition", n=2),
+        mb.ChaosEvent(step=800, kind="heal"),
+        mb.ChaosEvent(step=900, kind="join", n=1, degree=3),
+    )
+    assert mb.parse_chaos_spec("partition@10:3")[0].n == 3
+    assert mb.parse_chaos_spec("join@5:2:4")[0].degree == 4
+    assert mb.parse_chaos_spec(None) == ()
+    assert mb.parse_chaos_spec("") == ()
+
+
+def test_parse_chaos_spec_rejects_malformed():
+    for bad in ("leave@10", "heal@10:1", "partition@10",
+                "reboot@10:1", "leave:10:1"):
+        with pytest.raises(ValueError):
+            mb.parse_chaos_spec(bad)
+    with pytest.raises(ValueError):
+        mb.ChaosEvent(step=1, kind="partition", n=1)
+
+
+def test_chaos_partitions_folds_windows():
+    evs = mb.parse_chaos_spec("partition@4:bridge,heal@8,partition@12:3")
+    windows = mb.chaos_partitions(evs, num_steps=20, seed=7)
+    assert windows == (
+        PartitionWindow(start=4, heal=8, n_parts=2, seed=7),
+        PartitionWindow(start=12, heal=20, n_parts=3, seed=7),  # unhealed
+    )
+    assert mb.chaos_partitions(mb.parse_chaos_spec("leave@4:1"), 20) == ()
+
+
+def test_chaos_partitions_rejects_bad_pairing():
+    with pytest.raises(ValueError, match="still open"):
+        mb.chaos_partitions(
+            mb.parse_chaos_spec("partition@4:2,partition@6:2"), 20)
+    with pytest.raises(ValueError, match="without an open"):
+        mb.chaos_partitions(mb.parse_chaos_spec("heal@4"), 20)
+
+
+def test_scenario_rejects_overlapping_windows():
+    with pytest.raises(ValueError):
+        Scenario(name="x", partitions=(
+            PartitionWindow(start=2, heal=10),
+            PartitionWindow(start=6, heal=12),
+        ))
+    scen = Scenario(name="x", partitions=(PartitionWindow(start=2, heal=4),))
+    assert not scen.is_static
+    assert scen.max_parts == 2
+
+
+# ---------------------------------------------------------------------------
+# Partition schedule realization
+# ---------------------------------------------------------------------------
+def test_partition_components_connected_cover():
+    topo = _topo()
+    comp = partition_components(topo, PartitionWindow(start=0, heal=1,
+                                                      n_parts=3, seed=1))
+    assert comp.shape == (M,)
+    assert set(np.unique(comp)) == {0, 1, 2}
+    # every part is internally connected in the base graph
+    for c in range(3):
+        nodes = np.nonzero(comp == c)[0]
+        sub = topo.adjacency[np.ix_(nodes, nodes)]
+        reach = {0}
+        frontier = [0]
+        while frontier:
+            i = frontier.pop()
+            for j in np.nonzero(sub[i])[0]:
+                if j not in reach:
+                    reach.add(int(j))
+                    frontier.append(int(j))
+        assert len(reach) == len(nodes)
+
+
+def test_partition_components_explicit_validated():
+    topo = _topo()
+    w = PartitionWindow(start=0, heal=1,
+                        components=((0, 1, 2, 3), (4, 5, 6, 7)))
+    comp = partition_components(topo, w)
+    np.testing.assert_array_equal(comp, [0, 0, 0, 0, 1, 1, 1, 1])
+    with pytest.raises(ValueError):  # node 7 missing: not a cover
+        partition_components(topo, PartitionWindow(
+            start=0, heal=1, components=((0, 1, 2, 3), (4, 5, 6))))
+
+
+def test_partition_realization_block_doubly_stochastic():
+    """Inside the window the realized matrix is block-DS per component —
+    zero cross-component mass, rows/cols still sum to 1 (the per-step MH
+    rebuild keeps Assumption 1 within every component)."""
+    topo = _topo()
+    scen = Scenario(name="split", edge_drop=0.2, seed=1,
+                    partitions=(PartitionWindow(start=3, heal=7, seed=2),))
+    arrays = make_scenario_arrays(topo, scen)
+    comp = partition_components(topo, scen.partitions[0])
+    cross = comp[:, None] != comp[None, :]
+    for k in range(10):
+        r = realize(scen, arrays, jnp.int32(k))
+        w = np.asarray(realization_matrix(arrays, r), np.float64)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-5)
+        if 3 <= k < 7:
+            assert w[cross].sum() == 0.0
+            # per-component mean preservation (block-DS)
+            x = np.random.default_rng(k).standard_normal((M, 3))
+            for c in np.unique(comp):
+                sel = comp == c
+                np.testing.assert_allclose(
+                    (w @ x)[sel].mean(axis=0), x[sel].mean(axis=0),
+                    atol=1e-5)
+
+
+def test_heal_restores_base_matrix():
+    """A partitions-only scenario realizes the full MH mixing outside the
+    window (no PRNG is consumed by the cut, so the heal is exact) and a
+    strictly-cut matrix inside."""
+    topo = _topo()
+    scen = Scenario(name="split-only", seed=1,
+                    partitions=(PartitionWindow(start=2, heal=5, seed=2),))
+    arrays = make_scenario_arrays(topo, scen)
+    comp = partition_components(topo, scen.partitions[0])
+    cross = comp[:, None] != comp[None, :]
+    for k in (0, 1, 5, 6):
+        r = realize(scen, arrays, jnp.int32(k))
+        w = np.asarray(realization_matrix(arrays, r))
+        np.testing.assert_allclose(w, topo.mixing, atol=1e-6)
+    for k in (2, 3, 4):
+        r = realize(scen, arrays, jnp.int32(k))
+        w = np.asarray(realization_matrix(arrays, r))
+        assert w[cross].sum() == 0.0
+        assert not np.allclose(w, topo.mixing, atol=1e-6)
+
+
+def test_active_components_window_gating():
+    topo = _topo()
+    scen = Scenario(name="split-only", seed=1,
+                    partitions=(PartitionWindow(start=2, heal=5, seed=2),))
+    arrays = make_scenario_arrays(topo, scen)
+    comp = partition_components(topo, scen.partitions[0])
+    np.testing.assert_array_equal(
+        np.asarray(active_components(arrays, jnp.int32(1))), np.zeros(M))
+    np.testing.assert_array_equal(
+        np.asarray(active_components(arrays, jnp.int32(3))), comp)
+    np.testing.assert_array_equal(
+        np.asarray(active_components(arrays, jnp.int32(5))), np.zeros(M))
+
+
+def test_component_stats_hand_built():
+    comp = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    x = jnp.asarray([[0.0], [2.0], [10.0], [14.0]], jnp.float32)
+    cc, gap = component_stats(comp, x, 2)
+    # per-node deviation from own component mean: 1,1,2,2 -> mean sq = 2.5
+    assert float(cc) == pytest.approx(2.5)
+    # comp means 1 and 12, global mean 6.5 -> max gap 5.5
+    assert float(gap) == pytest.approx(5.5)
+
+
+# ---------------------------------------------------------------------------
+# Per-component metrics in the history buffers
+# ---------------------------------------------------------------------------
+def test_partition_metrics_in_history():
+    """A partitioned bind emits comp_consensus / comp_mean_gap per step;
+    the component mean gap blows up inside the window and reconverges
+    after heal (PaME's memoryless averaging heals the drift)."""
+    topo = _topo()
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((M, 4, 5)).astype(np.float32)
+    y = rng.standard_normal((M, 4)).astype(np.float32)
+
+    def grad_fn(p, b, k):
+        Ab, yb = b
+        r = Ab @ p - yb
+        return 0.5 * jnp.mean(r * r), Ab.T @ r / r.shape[0]
+
+    steps = 40
+    scen = Scenario(name="split-only", seed=1,
+                    partitions=(PartitionWindow(start=10, heal=20, seed=2),))
+    bound = get_algorithm("pame").bind(
+        grad_fn, topo, PaMEHp(nu=0.5, p=0.5), scenario=scen)
+    batch = (jnp.asarray(A), jnp.asarray(y))
+    _, hist = bound.run(jax.random.PRNGKey(1), np.zeros(5, np.float32),
+                        M, lambda k: batch, steps)
+    assert len(hist["comp_consensus"]) == steps
+    gap = np.asarray(hist["comp_mean_gap"])
+    in_window = gap[10:20].max()
+    assert in_window > 10 * max(gap[:10].max(), 1e-12)
+    assert gap[-1] < 0.1 * in_window  # post-heal reconvergence
+
+
+# ---------------------------------------------------------------------------
+# serve_train: empty timeline is bitwise the plain path
+# ---------------------------------------------------------------------------
+SERVE_ARGS = ["--arch", "stablelm-1.6b", "--variant", "smoke",
+              "--steps", "4", "--batch", "1", "--seq", "16",
+              "--nodes", "4", "--chunk", "2", "--arrival", "quiet",
+              "--prompt-len", "4", "--gen", "2", "--serve-batch", "1",
+              "--serve-nodes", "1"]
+
+
+def test_empty_chaos_timeline_bitwise_pin(capsys):
+    """`--chaos ""` must leave every code path of the plain serve_train
+    run untouched: final states are bitwise identical leaf by leaf."""
+    from repro.launch import serve_train as sv
+
+    plain = sv.main(SERVE_ARGS)
+    empty = sv.main(SERVE_ARGS + ["--chaos", ""])
+    capsys.readouterr()
+    for a, b in zip(jax.tree_util.tree_leaves(plain),
+                    jax.tree_util.tree_leaves(empty)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_train_chaos_smoke(capsys):
+    """One run through every event kind: leave, partition, heal, with
+    consensus serving — monitors must come back green."""
+    from repro.launch import serve_train as sv
+
+    sv.main(["--arch", "stablelm-1.6b", "--variant", "smoke",
+             "--steps", "8", "--batch", "1", "--seq", "16",
+             "--nodes", "5", "--chunk", "2", "--arrival", "quiet",
+             "--prompt-len", "4", "--gen", "2", "--serve-batch", "1",
+             "--serve-nodes", "1", "--serve-policy", "consensus",
+             "--chaos", "leave@2:1,partition@4:bridge,heal@6"])
+    out = capsys.readouterr().out
+    assert "leave@2: m=5->4" in out
+    assert "partition@4: graph split into 2 components" in out
+    assert "heal@6: partition re-merged" in out
+    assert out.count("(green)") >= 3  # leave conformance + 2 monitors
+    assert "[serve-train] done" in out

@@ -204,3 +204,166 @@ def test_crash_faults_refused_with_joins():
 def test_non_crash_faults_allowed_with_joins():
     mb.check_join_faults(None)
     mb.check_join_faults(FaultModel(name="l", loss=0.2))
+
+
+# ---------------------------------------------------------------------------
+# Graceful departures
+# ---------------------------------------------------------------------------
+def test_shrunk_mixing_doubly_stochastic():
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    s = mb.shrunk_topology(topo, (6, 7))
+    assert s.m == M_OLD - 2
+    np.testing.assert_allclose(s.mixing.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(s.mixing.sum(axis=0), 1.0, atol=1e-12)
+    assert np.array_equal(s.mixing, s.mixing.T)
+    # survivors keep their sub-graph
+    assert np.array_equal(s.adjacency, topo.adjacency[:6, :6])
+
+
+def test_shrunk_topology_validates():
+    topo = build_topology("ring", 4)
+    assert mb.shrunk_topology(topo, ()) is topo  # zero leavers: same object
+    with pytest.raises(ValueError):
+        mb.shrunk_topology(topo, (4,))
+    with pytest.raises(ValueError, match="at least one must remain"):
+        mb.shrunk_topology(topo, (0, 1, 2, 3))
+
+
+def test_retire_state_mean_preserving():
+    """The β-weighted deviation handoff keeps the survivor mean equal to
+    the pre-departure global mean (the paper's Assumption-1 analogue for
+    departures), for every floating node-stacked leaf."""
+    state = _trained_state()
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    pre_p = np.asarray(state.params, np.float64).mean(axis=0)
+    pre_s = np.asarray(state.sigma, np.float64).mean(axis=0)
+    out = mb.retire_state(state, topo, (6, 7))
+    assert np.asarray(out.params).shape[0] == M_OLD - 2
+    np.testing.assert_allclose(
+        np.asarray(out.params, np.float64).mean(axis=0), pre_p, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out.sigma, np.float64).mean(axis=0), pre_s, atol=1e-5)
+    # scalar step counter passes through untouched
+    assert np.asarray(out.step) == np.asarray(state.step)
+
+
+def test_retire_state_zero_leavers_bitwise_noop():
+    state = _trained_state()
+    topo = build_topology("ring", M_OLD)
+    assert mb.retire_state(state, topo, ()) is state
+
+
+def test_retire_consensus_state_costs_nothing():
+    """Near consensus the deviation handoff vanishes: retiring from a
+    row-identical state leaves the survivors' rows (numerically) alone —
+    a graceful leave is free, unlike a crash's frozen row."""
+    state = _trained_state()
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    consensus = jax.tree_util.tree_map(
+        lambda x: (jnp.broadcast_to(x[:1], x.shape)
+                   if getattr(x, "ndim", 0) >= 1 and x.shape[0] == M_OLD
+                   else x),
+        state,
+    )
+    out = mb.retire_state(consensus, topo, (7,))
+    np.testing.assert_allclose(np.asarray(out.params),
+                               np.asarray(consensus.params)[:7],
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_retire_then_train_stays_finite():
+    """End-to-end: retire two nodes from a trained state and keep
+    training over the shrunk graph."""
+    state = _trained_state()
+    topo = build_topology("erdos_renyi", M_OLD, p=0.5, seed=3)
+    shrunk = mb.retire_state(state, topo, (6, 7))
+    s_topo = mb.shrunk_topology(topo, (6, 7))
+
+    rng = np.random.default_rng(2)
+    A = rng.standard_normal((s_topo.m, 4, 5)).astype(np.float32)
+    y = rng.standard_normal((s_topo.m, 4)).astype(np.float32)
+
+    def grad_fn(p, b, k):
+        Ab, yb = b
+        r = Ab @ p - yb
+        return 0.5 * jnp.mean(r * r), Ab.T @ r / r.shape[0]
+
+    bound = get_algorithm("pame").bind(grad_fn, s_topo, PaMEHp(nu=0.5, p=0.5))
+    batch = (jnp.asarray(A), jnp.asarray(y))
+    new_state, hist = B.run_algorithm(
+        bound.step, shrunk, lambda k: batch, 5, params_of=bound.params_of)
+    assert np.all(np.isfinite(hist["loss"]))
+    assert np.asarray(bound.params_of(new_state)).shape[0] == s_topo.m
+
+
+# ---------------------------------------------------------------------------
+# Grow -> shrink round trip (property)
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["ring", "erdos_renyi", "regular"]),
+       n_new=st.integers(1, 4), seed=st.integers(0, 5))
+def test_grow_shrink_round_trip(kind, n_new, seed):
+    """Growing by n and retiring the n newest nodes recovers the original
+    graph and its MH mixing exactly — joins and LIFO departures are
+    inverse operations on the topology."""
+    topo = build_topology(kind, M_OLD, p=0.5, seed=seed)
+    grown = mb.grown_topology(topo, n_new, degree=2, seed=seed)
+    back = mb.shrunk_topology(grown, tuple(range(M_OLD, M_OLD + n_new)))
+    assert back.m == topo.m
+    np.testing.assert_array_equal(back.adjacency, topo.adjacency)
+    np.testing.assert_allclose(back.mixing, topo.mixing, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Chaos timeline validation
+# ---------------------------------------------------------------------------
+def test_crash_faults_refused_with_leaves():
+    with pytest.raises(ValueError, match="crash"):
+        mb.check_membership_faults(
+            FaultModel(name="c", crash=0.02, rejoin=0.2),
+            (mb.ChaosEvent(step=5, kind="leave", n=1),),
+        )
+
+
+def test_leave_join_same_step_refused():
+    evs = (mb.ChaosEvent(step=5, kind="leave", n=1),
+           mb.ChaosEvent(step=5, kind="join", n=1))
+    with pytest.raises(ValueError, match="same step"):
+        mb.check_membership_faults(None, evs)
+
+
+def test_membership_change_inside_partition_window_refused():
+    evs = (mb.ChaosEvent(step=4, kind="partition", n=2),
+           mb.ChaosEvent(step=6, kind="leave", n=1),
+           mb.ChaosEvent(step=8, kind="heal"))
+    with pytest.raises(ValueError, match="partition window"):
+        mb.check_membership_faults(None, evs)
+    # after the heal the same leave is fine
+    ok = (mb.ChaosEvent(step=4, kind="partition", n=2),
+          mb.ChaosEvent(step=8, kind="heal"),
+          mb.ChaosEvent(step=9, kind="leave", n=1))
+    mb.check_membership_faults(None, ok, m0=8)
+
+
+def test_timeline_emptying_graph_refused():
+    evs = (mb.ChaosEvent(step=2, kind="leave", n=3),
+           mb.ChaosEvent(step=4, kind="leave", n=1))
+    with pytest.raises(ValueError, match="retire"):
+        mb.check_membership_faults(None, evs, m0=4)
+    mb.check_membership_faults(None, evs[:1], m0=4)  # one node remains
+
+
+def test_partition_wider_than_remaining_graph_refused():
+    evs = (mb.ChaosEvent(step=2, kind="leave", n=2),
+           mb.ChaosEvent(step=4, kind="partition", n=4))
+    with pytest.raises(ValueError, match="3 nodes remain"):
+        mb.check_membership_faults(None, evs, m0=5)
+
+
+def test_loss_faults_allowed_with_timeline():
+    mb.check_membership_faults(
+        FaultModel(name="l", loss=0.2),
+        (mb.ChaosEvent(step=5, kind="leave", n=1),), m0=8)

@@ -177,3 +177,41 @@ def test_train_driver_resume_consistency():
     np.testing.assert_allclose(
         np.asarray(s_full.params["w"]), np.asarray(s_resumed.params["w"]), atol=1e-6
     )
+
+
+def test_restore_falls_back_to_newest_intact_step():
+    """Restore-without-step walks the fallback chain: a truncated newest
+    payload is skipped and the next-older intact checkpoint restores;
+    only when every step is corrupt does the newest error propagate."""
+    with tempfile.TemporaryDirectory() as d:
+        tree10 = {"a": jnp.full((16,), 10.0, jnp.float32)}
+        tree20 = {"a": jnp.full((16,), 20.0, jnp.float32)}
+        tree30 = {"a": jnp.full((16,), 30.0, jnp.float32)}
+        save_checkpoint(d, 10, tree10, keep=5)
+        save_checkpoint(d, 20, tree20, keep=5)
+        dir30 = save_checkpoint(d, 30, tree30, keep=5)
+        fpath = os.path.join(dir30, _leaf_files(dir30)[0])
+        with open(fpath, "r+b") as f:
+            f.truncate(os.path.getsize(fpath) - 24)
+        # newest (30) is truncated -> 20 restores
+        back = restore_checkpoint(d, tree10)
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree20["a"]))
+        # explicit step never falls back
+        with pytest.raises(CheckpointCorruptError, match="truncated"):
+            restore_checkpoint(d, tree10, 30)
+        # corrupt 20 too (crc) -> 10 restores
+        dir20 = os.path.join(d, "step_000000020")
+        with open(os.path.join(dir20, _leaf_files(dir20)[0]), "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            flipped = f.read(1)[0] ^ 0xFF
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([flipped]))
+        back = restore_checkpoint(d, tree10)
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree10["a"]))
+        # every step corrupt: the NEWEST step's error is the one raised
+        dir10 = os.path.join(d, "step_000000010")
+        os.remove(os.path.join(dir10, "manifest.json"))
+        with pytest.raises(CheckpointCorruptError, match="truncated"):
+            restore_checkpoint(d, tree10)

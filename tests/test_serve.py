@@ -237,3 +237,56 @@ def test_batched_paced_lanes_match_unbatched():
         np.testing.assert_allclose(
             np.asarray(hb["deferred_nodes"])[:, lane],
             hu["deferred_nodes"])
+
+
+# ---------------------------------------------------------------------------
+# Consensus-serving failover
+# ---------------------------------------------------------------------------
+def test_component_mean_params_per_component():
+    from repro.serve.serving import component_mean_params
+
+    params = {"w": jnp.asarray([[0.0, 2.0], [2.0, 4.0],
+                                [10.0, 20.0], [30.0, 40.0]], jnp.float32),
+              "step": jnp.asarray(7)}  # scalar leaves pass through
+    comp = np.asarray([0, 0, 1, 1])
+    out = component_mean_params(params, comp)
+    np.testing.assert_allclose(
+        np.asarray(out["w"]),
+        [[1.0, 3.0], [1.0, 3.0], [20.0, 30.0], [20.0, 30.0]])
+    assert int(out["step"]) == 7
+    # comp=None averages globally — every node serves the PME mean
+    out = component_mean_params({"w": params["w"]}, None)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full((4, 2), [10.5, 16.5]))
+
+
+def test_component_mean_params_preserves_dtype_and_shape():
+    from repro.serve.serving import component_mean_params
+
+    params = {"w": jnp.ones((4, 2, 3), jnp.bfloat16)}
+    out = component_mean_params(params, np.asarray([0, 1, 0, 1]))
+    assert out["w"].shape == (4, 2, 3)
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_serve_round_rejects_unknown_policy():
+    from repro.serve.serving import ServeLoop
+
+    with pytest.raises(ValueError, match="unknown serving policy"):
+        ServeLoop.serve_round(None, {"w": jnp.zeros((2, 3))},
+                              policy="bogus")
+
+
+def test_shrink_events_keeps_survivor_accounting():
+    from repro.serve.events import shrink_events
+
+    pac = ServePacing(ArrivalProcess(name="s", rate=3.0), capacity=2)
+    es = pac.init(4)
+    for k in range(6):
+        es, _, _ = pac.advance(es, k)
+    kept = shrink_events(es, [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(kept.arrived),
+                                  np.asarray(es.arrived)[:3])
+    np.testing.assert_array_equal(np.asarray(kept.wait),
+                                  np.asarray(es.wait)[:3])
+    assert shrink_events(es, [0, 1, 2, 3]) is es  # full keep: same object
